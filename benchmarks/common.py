@@ -1,0 +1,79 @@
+"""Shared benchmark utilities: timing, CSV rows, subprocess workers.
+
+CPU-only container: absolute numbers are CPU wall times; the *relative*
+comparisons (dedup on/off, merged vs separate tables, dynamic vs MCH,
+balanced vs fixed batches) are what reproduce the paper's tables. Roofline-
+model numbers are TPU-v5e projections (launch/cost_model.py).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+from typing import Callable, Dict, List
+
+import jax
+
+
+def timeit(fn: Callable[[], object], *, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call (block_until_ready on jax outputs)."""
+    for _ in range(warmup):
+        _block(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _block(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _block(x):
+    try:
+        jax.block_until_ready(x)
+    except Exception:
+        pass
+    return x
+
+
+def run_worker(script: str, *args: str, devices: int = 8, timeout: int = 900) -> str:
+    """Run a bench worker with N forced host devices in a fresh subprocess
+    (the main bench process keeps the single real CPU device)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__), "workers", script),
+         *args],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"{script} failed:\n{proc.stdout}\n{proc.stderr}")
+    return proc.stdout
+
+
+class Table:
+    """Tiny CSV table accumulator; every benchmark emits one."""
+
+    def __init__(self, name: str, columns: List[str]):
+        self.name = name
+        self.columns = columns
+        self.rows: List[List] = []
+
+    def add(self, *values):
+        assert len(values) == len(self.columns)
+        self.rows.append(list(values))
+
+    def render(self) -> str:
+        out = [f"# {self.name}", ",".join(self.columns)]
+        for r in self.rows:
+            out.append(",".join(_fmt(v) for v in r))
+        return "\n".join(out)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

@@ -1,0 +1,95 @@
+"""§Roofline: the full (arch × input-shape) table on the single-pod mesh.
+
+Primary source: the analytic cost model (launch/cost_model.py — trip-count
+exact). When results/dryrun_baseline.json exists (produced by
+`python -m repro.launch.dryrun --all --both-meshes --out ...`), the HLO-
+derived numbers are merged in as cross-checks (exact for loop-free decode
+programs; loop bodies counted once elsewhere — see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Table
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import (
+    ASSIGNED,
+    get_config,
+    long_context_variant,
+    supports_shape,
+)
+from repro.launch.cost_model import ParallelPlan, step_cost
+
+DRYRUN_JSON = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun_baseline.json")
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def _hlo_index():
+    if not os.path.exists(DRYRUN_JSON):
+        return {}
+    with open(DRYRUN_JSON) as f:
+        recs = json.load(f)
+    return {
+        (r["arch"], r["shape"]): r
+        for r in recs
+        if r.get("status") == "ok" and r.get("mesh") == "16x16"
+    }
+
+
+def run() -> Table:
+    t = Table(
+        "roofline_all_pairs_16x16",
+        ["arch", "shape", "dominant", "compute_s", "memory_s", "collective_s",
+         "bound_s", "useful_ratio",
+         "opt_dominant", "opt_bound_s", "opt_gain",  # beyond-paper plan
+         "n_params", "n_active",
+         "hlo_flops_dev", "hlo_bytes_dev", "hlo_coll_bytes_dev"],
+    )
+    hlo = _hlo_index()
+    for arch in ASSIGNED:
+        for shape_name in SHAPE_ORDER:
+            cfg = get_config(arch)
+            if not supports_shape(cfg, shape_name):
+                t.add(arch, shape_name, "SKIP(encoder-only)", 0, 0, 0, 0, 0,
+                      "-", 0, "-", 0, 0, 0, 0, 0)
+                continue
+            if shape_name == "long_500k":
+                cfg = long_context_variant(cfg)
+            shape = INPUT_SHAPES[shape_name]
+            ndata = 16
+            per_dev = max(1, shape.global_batch // ndata)
+            accum = per_dev if (cfg.d_model >= 4096 and shape.kind == "train") \
+                else max(1, per_dev // 4) if shape.kind == "train" else 1
+            plan = ParallelPlan(chips=256, data=16, model=16,
+                                accum_steps=accum)
+            c = step_cost(cfg, shape, plan)
+            terms = c.terms(plan)
+            bound = max(terms["compute_s"], terms["memory_s"],
+                        terms["collective_s"])
+            # beyond-paper plan (§Perf): dp-dense + chunked CE, accum 1
+            oplan = ParallelPlan(chips=256, data=16, model=16, accum_steps=1,
+                                 dp_dense=True, chunked_ce=True)
+            oterms = step_cost(cfg, shape, oplan).terms(oplan)
+            obound = max(oterms["compute_s"], oterms["memory_s"],
+                         oterms["collective_s"])
+            h = hlo.get((arch, shape_name), {})
+            hr = h.get("roofline", {})
+            t.add(
+                arch, shape_name, terms["dominant"],
+                round(terms["compute_s"], 4), round(terms["memory_s"], 4),
+                round(terms["collective_s"], 4), round(bound, 4),
+                round(terms["useful_ratio"], 3),
+                oterms["dominant"], round(obound, 4),
+                f"{bound / obound:.2f}x" if obound else "-",
+                c.n_params, c.n_active,
+                hr.get("flops", ""), hr.get("hbm_bytes", ""),
+                hr.get("coll_bytes", ""),
+            )
+    return t
+
+
+if __name__ == "__main__":
+    print(run().render())

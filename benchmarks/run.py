@@ -1,0 +1,60 @@
+"""Benchmark driver: one module per paper table/figure + the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig16      # one benchmark
+
+Each benchmark emits a CSV table; absolute times are CPU wall-clock at smoke
+scale, relative gains are the reproduced paper artifacts, and roofline
+numbers are TPU-v5e projections from the analytic model.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+BENCHMARKS = {
+    "fig11_gauc": ("benchmarks.accuracy_gauc", "Fig. 11 GAUC parity"),
+    "fig12_decomposition": ("benchmarks.time_decomposition",
+                            "Fig. 12 time decomposition"),
+    "fig13_ablation": ("benchmarks.ablation", "Fig. 13 cumulative ablation"),
+    "fig14_seq_balancing": ("benchmarks.seq_balancing",
+                            "Fig. 14/15 + Table 2 sequence balancing"),
+    "fig16_dedup": ("benchmarks.dedup_strategies", "Fig. 16 dedup strategies"),
+    "table3_dynamic_table": ("benchmarks.dynamic_table",
+                             "Table 3 dynamic table vs MCH"),
+    "fig17_scalability": ("benchmarks.scalability", "Fig. 17 scalability"),
+    "roofline": ("benchmarks.roofline", "§Roofline all 40 pairs"),
+}
+
+
+def main() -> int:
+    want = sys.argv[1:] or list(BENCHMARKS)
+    failures = []
+    for key in want:
+        matches = [k for k in BENCHMARKS if key in k]
+        if not matches:
+            print(f"unknown benchmark {key!r}; known: {list(BENCHMARKS)}")
+            return 2
+        for k in matches:
+            mod_name, desc = BENCHMARKS[k]
+            print(f"\n=== {k}: {desc} ===")
+            t0 = time.time()
+            try:
+                mod = __import__(mod_name, fromlist=["run"])
+                table = mod.run()
+                print(table.render())
+                print(f"[{k} done in {time.time() - t0:.1f}s]")
+            except Exception as e:  # report and continue
+                import traceback
+
+                traceback.print_exc()
+                failures.append((k, str(e)))
+    if failures:
+        print(f"\n{len(failures)} benchmark(s) FAILED: {[f[0] for f in failures]}")
+        return 1
+    print("\nALL BENCHMARKS OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

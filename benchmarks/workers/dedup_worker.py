@@ -1,0 +1,73 @@
+"""Fig. 16 worker: four dedup strategies on a simulated (1 data × 4 model)
+mesh. Prints CSV: strategy,ids_sent,lookups,emb_bytes,wall_us.
+
+NOTE: this container has ONE cpu core — multi-device emulation serializes
+collectives, so wall_us is emulation-bound and reported only as a sanity
+number. The physically meaningful outputs are the measured *communication
+volumes* (ids_sent -> ID exchange; ids_sent × dim × 4B -> embedding
+exchange; lookups -> local probe work), which benchmarks/dedup_strategies.py
+converts to network time on the paper's A100+IB bandwidth model.
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hashtable as ht
+from repro.core import sharded_embedding as se
+
+
+def main(dim: int, dup_rate: float):
+    mesh = jax.make_mesh((1, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    tcfg = ht.HashTableConfig(capacity=1 << 11, embed_dim=dim, chunk_rows=512)
+    rng = np.random.default_rng(0)
+    n_unique = 1024
+    universe = rng.integers(0, 10**9, n_unique).astype(np.int64)
+    own = np.asarray(ht.murmur3_fmix64(jnp.asarray(universe)) % np.uint64(4)).astype(int)
+    tables = [ht.DynamicHashTable(tcfg, jax.random.PRNGKey(i)) for i in range(4)]
+    for s in range(4):
+        mine = universe[own == s]
+        if len(mine):
+            tables[s].insert(jnp.asarray(mine))
+    stacked = se.stack_table_shards(tables)
+    tcfg = tables[0].cfg
+
+    # query batch with controlled duplicate rate (sequences repeat hot ids)
+    B, S = 4, 128
+    n_hot = max(1, int(n_unique * (1 - dup_rate)))
+    q = jnp.asarray(rng.choice(universe[:n_hot], size=(B, S)).astype(np.int64))
+
+    for name, d1, d2 in [
+        ("two_stage", True, True),
+        ("comm_only", True, False),
+        ("lookup_only", False, True),
+        ("none", False, False),
+    ]:
+        cfg = se.LookupConfig(
+            num_shards=4, embed_dim=dim, local_unique_cap=B * S,
+            per_peer_cap=B * S, owner="hash",
+            dedup_stage1=d1, dedup_stage2=d2,
+        )
+        fn = se.make_hash_lookup(cfg, tcfg, mesh, P("data", None))
+        with jax.set_mesh(mesh):
+            vecs, stats = fn(stacked, q)  # compile+warm
+            jax.block_until_ready(vecs)
+            t0 = time.perf_counter()
+            vecs, stats = fn(stacked, q)
+            jax.block_until_ready(vecs)
+            wall = time.perf_counter() - t0
+        emb_bytes = int(stats.ids_sent) * dim * 4 * 2  # fetch + grad return
+        print(f"{name},{int(stats.ids_sent)},{int(stats.lookups)},"
+              f"{emb_bytes},{wall * 1e6:.0f}")
+
+
+if __name__ == "__main__":
+    main(int(sys.argv[1]), float(sys.argv[2]))

@@ -1,0 +1,67 @@
+"""Serving example: prefill a batch of requests, then decode with a KV /
+recurrent cache — the `serve_step` path the decode dry-run shapes lower.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch yi-6b --tokens 16
+    PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-9b
+
+Runs the REDUCED config of the chosen architecture on CPU (the full configs
+are exercised via the dry-run); greedy-decodes a batch of random prompts.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.params import init_params
+from repro.configs.registry import get_config, supports_shape
+from repro.models.transformer import init_stack_caches, lm_param_defs
+from repro.train import trainer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    if not supports_shape(cfg, "decode_32k"):
+        raise SystemExit(f"{args.arch} is encoder-only: no serve_step "
+                         f"(documented skip)")
+    params = init_params(jax.random.PRNGKey(0), lm_param_defs(cfg))
+    decode = jax.jit(T.make_decode_step(cfg))
+
+    B, P, N = args.batch, args.prompt_len, args.tokens
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
+
+    caches = init_stack_caches(cfg, B, P + N)
+    # prefill expressed as decode steps (same cache layout; a fused
+    # prefill_step exists for the prefill_32k shape)
+    t0 = time.time()
+    for t in range(P):
+        logits, caches = decode(params, caches, prompts[:, t:t + 1], jnp.int32(t))
+    print(f"prefilled {B}×{P} tokens in {time.time() - t0:.2f}s")
+
+    out = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t0 = time.time()
+    for t in range(P, P + N):
+        out.append(np.asarray(tok)[:, 0])
+        logits, caches = decode(params, caches, tok, jnp.int32(t))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    dt = time.time() - t0
+    gen = np.stack(out, axis=1)
+    print(f"decoded {N} tokens/seq × {B} seqs in {dt:.2f}s "
+          f"({B * N / dt:.1f} tok/s)")
+    for b in range(min(B, 2)):
+        print(f"  seq {b}: {gen[b].tolist()}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""MTGRBoost reproduction: distributed GRM training system in JAX.
+
+64-bit mode is enabled globally: the paper's global-ID encoding (Eq. 8)
+uses the full 64-bit integer space, and MurmurHash3 operates on 64-bit
+lanes. All model code specifies dtypes explicitly, so this does not leak
+float64 into the dense stack.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,193 @@
+"""Elastic checkpoint resuming (paper §5.2).
+
+Each device independently saves its *own* shard file (no single consolidated
+checkpoint, no full-checkpoint scans on load). Loading onto a different
+device count uses modulo arithmetic:
+
+  * scale UP (8 -> 16): new device r loads old shard (r % 8); devices r and
+    r+8 split the rows of old shard r (each takes its half).
+  * scale DOWN (16 -> 8): new device r loads old shards {r, r+8} and
+    concatenates their rows.
+
+This matches the paper's example ("GPU 0 and GPU 8 load parameters from the
+checkpoint saved on the original GPU 0") and its insight that cluster scaling
+follows powers of two. Works for any old/new counts where one divides the
+other; non-divisible pairs raise (the paper makes the same assumption).
+
+Format: one `dense_XXXX.npz` per device for replicated dense params (only
+device 0 writes; all devices read it) and one `sparse_XXXX.npz` per device
+holding its row-sharded table shard. Sharding convention: row-contiguous
+blocks, shard r of N owns rows [r*R/N, (r+1)*R/N).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Pytree <-> flat-dict (npz-friendly)
+# ---------------------------------------------------------------------------
+
+
+def flatten_tree(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        # np.savez can't store bf16 natively; tag and view as uint16.
+        if arr.dtype == jnp.bfloat16:
+            out["__bf16__" + key] = arr.view(np.uint16)
+        else:
+            out[key] = arr
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def unflatten_into(tree_like: Any, flat: Dict[str, np.ndarray]) -> Any:
+    """Rebuild a pytree with the same structure as `tree_like` from a flat dict."""
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, proto in paths:
+        key = "/".join(_path_str(p) for p in path)
+        if key in flat:
+            leaves.append(jnp.asarray(flat[key]))
+        elif "__bf16__" + key in flat:
+            leaves.append(jnp.asarray(flat["__bf16__" + key].view(jnp.bfloat16)))
+        else:
+            raise KeyError(f"checkpoint missing {key!r}")
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Save
+# ---------------------------------------------------------------------------
+
+
+def save_dense(ckpt_dir: str, step: int, dense_tree: Any) -> str:
+    """Replicated dense params: written once (by 'device 0')."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"dense_{step:08d}.npz")
+    np.savez(path, **flatten_tree(dense_tree))
+    return path
+
+
+def save_sparse_shard(
+    ckpt_dir: str, step: int, device_index: int, num_devices: int, shard_tree: Any
+) -> str:
+    """Per-device independent shard save (the paper's design)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"sparse_{step:08d}_{device_index:04d}of{num_devices:04d}.npz")
+    np.savez(path, **flatten_tree(shard_tree))
+    return path
+
+
+def write_meta(ckpt_dir: str, step: int, meta: Dict[str, Any]) -> None:
+    with open(os.path.join(ckpt_dir, f"meta_{step:08d}.json"), "w") as f:
+        json.dump(meta, f)
+
+
+# ---------------------------------------------------------------------------
+# Load (elastic)
+# ---------------------------------------------------------------------------
+
+
+def _find_shards(ckpt_dir: str, step: int) -> Tuple[int, Dict[int, str]]:
+    pat = re.compile(rf"sparse_{step:08d}_(\d+)of(\d+)\.npz$")
+    shards: Dict[int, str] = {}
+    n_old = 0
+    for name in os.listdir(ckpt_dir):
+        m = pat.match(name)
+        if m:
+            shards[int(m.group(1))] = os.path.join(ckpt_dir, name)
+            n_old = int(m.group(2))
+    if not shards:
+        raise FileNotFoundError(f"no sparse shards for step {step} in {ckpt_dir}")
+    assert len(shards) == n_old, f"found {len(shards)} of {n_old} shards"
+    return n_old, shards
+
+
+def load_dense(ckpt_dir: str, step: int, tree_like: Any) -> Any:
+    path = os.path.join(ckpt_dir, f"dense_{step:08d}.npz")
+    return unflatten_into(tree_like, dict(np.load(path)))
+
+
+def load_sparse_shard(
+    ckpt_dir: str,
+    step: int,
+    device_index: int,
+    num_devices: int,
+    tree_like: Any,
+    row_sharded: Optional[Sequence[str]] = None,
+) -> Any:
+    """Elastic shard load via modulo arithmetic (paper §5.2).
+
+    `row_sharded`: leaf-path prefixes whose dim 0 is the sharded row axis
+    (None => every array leaf is row-sharded). Scalars/metadata are taken
+    from the first contributing old shard.
+    """
+    n_old, shard_paths = _find_shards(ckpt_dir, step)
+
+    if num_devices == n_old:
+        return unflatten_into(tree_like, dict(np.load(shard_paths[device_index])))
+
+    def is_sharded(key: str, arr: np.ndarray) -> bool:
+        if arr.ndim == 0:
+            return False
+        k = key.replace("__bf16__", "")
+        return row_sharded is None or any(k.startswith(p) for p in row_sharded)
+
+    if num_devices > n_old:
+        # Scale up: each new device takes a slice of old shard (r % n_old).
+        assert num_devices % n_old == 0, "device counts must divide (powers of two)"
+        factor = num_devices // n_old
+        src = np.load(shard_paths[device_index % n_old])
+        piece = device_index // n_old
+        flat = {}
+        for k in src.files:
+            arr = src[k]
+            if is_sharded(k, arr):
+                rows = arr.shape[0]
+                assert rows % factor == 0, f"{k}: rows {rows} not divisible by {factor}"
+                r = rows // factor
+                flat[k] = arr[piece * r : (piece + 1) * r]
+            else:
+                flat[k] = arr
+        return unflatten_into(tree_like, flat)
+
+    # Scale down: new device concatenates old shards {r, r+new, r+2*new, ...}.
+    assert n_old % num_devices == 0, "device counts must divide (powers of two)"
+    sources = [
+        np.load(shard_paths[device_index + j * num_devices])
+        for j in range(n_old // num_devices)
+    ]
+    flat = {}
+    for k in sources[0].files:
+        arr0 = sources[0][k]
+        if is_sharded(k, arr0):
+            flat[k] = np.concatenate([s[k] for s in sources], axis=0)
+        else:
+            flat[k] = arr0
+    return unflatten_into(tree_like, flat)
+
+
+def latest_step(ckpt_dir: str) -> int:
+    pat = re.compile(r"meta_(\d+)\.json$")
+    steps = [int(m.group(1)) for n in os.listdir(ckpt_dir) if (m := pat.match(n))]
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    return max(steps)

@@ -1,0 +1,2 @@
+from repro.common.params import ParamDef, init_params, partition_specs, param_count
+from repro.common.sharding import LogicalRules, logical_to_mesh_spec

@@ -1,0 +1,47 @@
+"""Distribution context threaded through model code.
+
+Model `apply` functions are pure jnp by default (single device, smoke tests).
+When a `DistContext` is provided, collective-aware blocks switch on:
+
+* expert-parallel MoE dispatch (all-to-all over the `model` axis),
+* sequence-sharded decode attention (KV cache length sharded over `model`,
+  merged with a log-sum-exp combine) for caches too large to replicate.
+
+Both are expressed with `jax.shard_map` *inside* the jitted step —
+partial-manual over the `model` axis only (`axis_names={'model'}`), so the
+batch axes stay under the automatic SPMD partitioner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    mesh: Mesh
+    model_axis: str = "model"  # tensor-parallel / expert-parallel / kv-seq axis
+    batch_axes: Tuple[str, ...] = ("data",)  # ('pod','data') on the multi-pod mesh
+    shard_kv_seq: bool = True  # shard decode KV cache length over model_axis
+    expert_parallel: bool = True  # all-to-all MoE dispatch over model_axis
+    # Residual-stream PartitionSpec, pinned between blocks. Without this the
+    # backward pass can lose batch sharding (measured: a replicated
+    # (B, S, H, hd) activation-gradient all-reduce per layer under dp-dense).
+    act_spec: Optional[PartitionSpec] = None
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    def constrain_acts(self, x: jax.Array) -> jax.Array:
+        if self.act_spec is None:
+            return x
+        spec = PartitionSpec(*(list(self.act_spec) + [None] * (x.ndim - len(self.act_spec))))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+
+def model_axis_of(dist: Optional[DistContext]) -> Optional[str]:
+    return dist.model_axis if dist is not None else None

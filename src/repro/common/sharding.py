@@ -1,0 +1,131 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style).
+
+Model code annotates tensors with *logical* axis names ("batch", "embed",
+"heads", "vocab", "expert", ...). A `LogicalRules` table maps each logical
+axis to zero or more mesh axes. Per-arch configs may override rules (e.g.
+disable tensor parallelism for the paper-faithful data-parallel dense model).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+from jax.sharding import PartitionSpec
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+class LogicalRules:
+    def __init__(self, rules: Dict[str, MeshAxes]):
+        self.rules = dict(rules)
+
+    def override(self, **kw: MeshAxes) -> "LogicalRules":
+        r = dict(self.rules)
+        r.update(kw)
+        return LogicalRules(r)
+
+    def resolve(self, name: Optional[str]) -> MeshAxes:
+        if name is None:
+            return None
+        return self.rules.get(name, None)
+
+
+# Default production rules. `model` carries: embedding-table rows (the paper's
+# model-parallel sparse tables) AND tensor-parallel dims of the dense stack
+# (our extension, see DESIGN.md §2.1). Batch is sharded over pod×data.
+DEFAULT_RULES = LogicalRules(
+    {
+        "batch": ("pod", "data"),
+        "seq": None,
+        "embed": None,  # activations' feature dim replicated
+        "vocab": "model",  # row-sharded embedding table (paper-faithful)
+        "table_row": "model",  # hash-table rows / key slots
+        "heads": "model",  # TP over attention heads
+        "kv_heads": "model",  # TP over KV heads (GQA: only if kv >= model axis)
+        "attn_fan": "model",  # row/col-parallel fallback when heads % tp != 0
+        "mlp": "model",  # TP over ffn hidden
+        "expert": "model",  # expert parallelism
+        "rnn_state": "model",  # recurrent state dim (xLSTM/RG-LRU)
+        "kv_seq": "model",  # decode KV-cache length (sharded_decode_attention)
+        "rnn_head_k": "model",  # mLSTM matrix-memory key dim (state sharding)
+        "head_dim": None,
+        "expert_mlp": None,
+        "stack": None,  # scanned layer axis
+    }
+)
+
+# Paper-faithful rules for the GRM benchmarks: dense model fully replicated
+# (pure data parallelism, §3 of the paper); only sparse tables are model-parallel.
+PAPER_FAITHFUL_RULES = DEFAULT_RULES.override(
+    heads=None, kv_heads=None, mlp=None, expert=None, rnn_state=None,
+    kv_seq=None, attn_fan=None, rnn_head_k=None, vocab="model"
+)
+
+# Beyond-paper §Perf variant ("dp-dense"): NO tensor parallelism — batch
+# shards over data × model, memory comes from full FSDP (fsdp_specs over both
+# axes) instead of TP. Kills the per-block activation all-reduces that
+# dominate the TP baseline's collective term; experts stay expert-parallel
+# over `model` (the MoE all-to-all is cheap — it moves activations once, not
+# per sublayer). See EXPERIMENTS.md §Perf.
+DP_DENSE_RULES = DEFAULT_RULES.override(
+    batch=("pod", "data", "model"),
+    heads=None, kv_heads=None, mlp=None, attn_fan=None,
+    rnn_state=None, rnn_head_k=None, kv_seq=None,
+    # vocab must NOT reuse `model` here: the logits einsum would then have
+    # batch and vocab competing for the same mesh axis and GSPMD replicates
+    # activations (measured: 3.5 TB temp). Embedding/head stay FSDP-sharded
+    # via fsdp_specs; the logits tensor is handled by chunked CE instead.
+    vocab=None, expert="model",
+)
+
+
+def fit_spec_to_shape(spec: PartitionSpec, shape, mesh) -> PartitionSpec:
+    """Drop mesh axes a dim cannot honor (dim % axes-product != 0).
+
+    Needed for degenerate workload dims — e.g. long_500k has global_batch=1,
+    which cannot shard over a 16-way data axis. Keeps the longest prefix of
+    each dim's axis tuple that still divides the dim size.
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, e in zip(shape, entries):
+        axes = (e,) if isinstance(e, str) else tuple(e or ())
+        kept = []
+        prod = 1
+        for a in axes:
+            prod *= mesh.shape[a]
+            if dim % prod == 0:
+                kept.append(a)
+            else:
+                break
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def logical_to_mesh_spec(
+    logical_axes: Sequence[Optional[str]], rules: LogicalRules
+) -> PartitionSpec:
+    resolved = [rules.resolve(a) for a in logical_axes]
+    # PartitionSpec forbids using a mesh axis twice; keep first occurrence.
+    seen = set()
+    out = []
+    for r in resolved:
+        axes = (r,) if isinstance(r, str) else (r or ())
+        axes = tuple(a for a in axes if a not in seen)
+        seen.update(axes)
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(axes)
+    # Trim trailing Nones for cleanliness.
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)

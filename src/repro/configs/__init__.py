@@ -1,0 +1,6 @@
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+)
+from repro.configs.registry import ARCHS, get_config, long_context_variant  # noqa: F401

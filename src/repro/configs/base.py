@@ -1,0 +1,144 @@
+"""Model / run configuration dataclasses.
+
+One `ModelConfig` per assigned architecture lives in `repro/configs/<id>.py`;
+`repro/configs/registry.py` resolves ``--arch <id>`` strings. `tp` is the
+size of the `model` mesh axis the config targets (16 for the production pod);
+smoke tests instantiate `reduced()` variants that run on one CPU device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | vlm | audio | grm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 => d_model // num_heads
+
+    # attention details
+    qkv_bias: bool = False
+    causal: bool = True  # False => encoder-only (hubert)
+    rope_theta: float = 10_000.0
+    window_size: int = 0  # >0 => sliding-window/local attention
+    attn_chunk: int = 1024  # KV chunk for online-softmax attention (memory O(S·chunk))
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    shared_expert: bool = False  # llama4-style shared expert alongside routed ones
+
+    # SSM / hybrid
+    block_pattern: Tuple[str, ...] = ()  # cycle of 'attn'|'local'|'mlstm'|'slstm'|'rglru'
+    rnn_width: int = 0  # recurrent state width (RG-LRU lru_width / xLSTM inner dim)
+    conv_kernel: int = 4
+
+    # GRM extras (HSTU + MMoE)
+    mmoe_experts: int = 0
+    mmoe_topk: int = 0
+    mmoe_d_ff: int = 0
+    num_tasks: int = 2  # CTR, CTCVR
+
+    # numerics / structure
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"  # compute/param dtype for the dense stack
+    tie_embeddings: bool = False
+    scan_layers: bool = True
+    remat: bool = True  # activation checkpointing for train_step
+
+    # distribution
+    tp: int = 16  # target `model`-axis size
+    # When heads % tp != 0 (llava 56H, llama4 40H) head-sharded TP is
+    # impossible; fall back to sharding attention weights on the embed dim
+    # (row/col-parallel) so the weights still fit; see DESIGN.md §5.
+    # Computed, not stored: see `heads_shardable`.
+    rules_overrides: Tuple[Tuple[str, Optional[str]], ...] = ()
+
+    # modality frontend stub (DESIGN.md: the one allowed stub)
+    frontend: str = "none"  # none | vision_patches | audio_frames
+    frontend_tokens: int = 0  # patches/frames prepended (vlm); audio: all frames
+
+    source: str = ""  # citation for the config
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def heads_shardable(self) -> bool:
+        return self.tp > 0 and self.num_heads % self.tp == 0
+
+    @property
+    def kv_shardable(self) -> bool:
+        return self.tp > 0 and self.num_kv_heads % self.tp == 0
+
+    @property
+    def vocab_shardable(self) -> bool:
+        return self.tp > 0 and self.vocab_size % self.tp == 0
+
+    @property
+    def is_encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        """Per-layer block kinds, cycling block_pattern (default: all attn)."""
+        cycle = self.block_pattern or ("attn",)
+        return tuple(cycle[i % len(cycle)] for i in range(self.num_layers))
+
+    def reduced(self) -> "ModelConfig":
+        """CPU-smoke-test variant: same family, tiny dims (per instructions:
+        <=2 layers, d_model <= 512, <= 4 experts)."""
+        d = min(self.d_model, 256)
+        heads = min(self.num_heads, 4)
+        kv = max(1, min(self.num_kv_heads, heads))
+        return dataclasses.replace(
+            self,
+            num_layers=2 if not self.block_pattern else max(2, len(self.block_pattern)),
+            d_model=d,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=d // heads,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            moe_d_ff=min(self.moe_d_ff, 256) if self.moe_d_ff else 0,
+            rnn_width=min(self.rnn_width, 2 * d) if self.rnn_width else 0,
+            mmoe_experts=min(self.mmoe_experts, 4) if self.mmoe_experts else 0,
+            mmoe_d_ff=min(self.mmoe_d_ff, 128) if self.mmoe_d_ff else 0,
+            window_size=min(self.window_size, 64) if self.window_size else 0,
+            attn_chunk=64,
+            frontend_tokens=min(self.frontend_tokens, 16) if self.frontend_tokens else 0,
+            tp=1,
+            dtype="float32",
+            remat=False,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """One of the four assigned workload shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}

@@ -1,0 +1,39 @@
+"""The paper's own GRM configs (Table 1): 4 GFLOPs and 110 GFLOPs variants.
+
+| variant | complexity | emb dim | HSTU blocks | HSTU heads |
+|---------|-----------:|--------:|------------:|-----------:|
+| small   |        4 G |     512 |           3 |          2 |
+| large   |      110 G |    1024 |          22 |          4 |
+
+The sparse side (embedding tables) is owned by core/ (dynamic hash tables,
+merging, dedup) — `vocab_size` here is unused; `d_model` doubles as the
+embedding dim. The paper trains the dense stack pure-data-parallel
+(PAPER_FAITHFUL_RULES); MMoE head has 4 experts, top-2, for the CTR/CTCVR
+multi-task objective.
+"""
+from repro.configs.base import ModelConfig
+
+
+def _grm(name: str, emb_dim: int, blocks: int, heads: int) -> ModelConfig:
+    return ModelConfig(
+        name=name,
+        arch_type="grm",
+        num_layers=blocks,
+        d_model=emb_dim,
+        num_heads=heads,
+        num_kv_heads=heads,
+        d_ff=0,  # HSTU blocks carry their own projections
+        vocab_size=0,  # embeddings come from the dynamic hash tables
+        block_pattern=("hstu",),
+        mmoe_experts=4,
+        mmoe_topk=2,
+        mmoe_d_ff=4 * emb_dim,
+        num_tasks=2,  # CTR, CTCVR
+        scan_layers=True,
+        tp=16,
+        source="MTGRBoost Table 1",
+    )
+
+
+GRM_SMALL_4G = _grm("grm-4g", 512, 3, 2)  # ~4 GFLOPs / forward @ seq 600
+GRM_LARGE_110G = _grm("grm-110g", 1024, 22, 4)  # ~110 GFLOPs / forward

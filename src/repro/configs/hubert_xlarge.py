@@ -1,0 +1,23 @@
+"""hubert-xlarge — encoder-only audio transformer (same arch as wav2vec2)
+[arXiv:2106.07447]. The mel-spectrogram + conv feature extractor is the
+allowed stub: `input_specs` supplies (B, S, d) frame embeddings. Training
+objective: masked-unit prediction over the 504-way cluster vocabulary.
+
+Encoder-only => no decode step: decode_32k and long_500k are skipped for
+this arch (DESIGN.md §Skips).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    arch_type="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,  # full MHA
+    d_ff=5120,
+    vocab_size=504,  # k-means cluster units
+    causal=False,  # bidirectional encoder
+    frontend="audio_frames",
+    source="arXiv:2106.07447 (HuBERT)",
+)

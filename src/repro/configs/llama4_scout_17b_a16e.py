@@ -1,0 +1,22 @@
+"""llama4-scout-17b-a16e — MoE 16 experts top-1 + shared expert, early
+fusion [hf:meta-llama/Llama-4-Scout-17B-16E]. Expert-parallel over the
+`model` mesh axis (16 experts / 16-way axis = 1 expert per device)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    arch_type="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,  # not divisible by tp=16 -> attn_fan fallback
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    block_pattern=("moe",),
+    num_experts=16,
+    experts_per_token=1,
+    moe_d_ff=8192,
+    shared_expert=True,
+    rope_theta=500_000.0,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+)

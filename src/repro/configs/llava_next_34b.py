@@ -1,0 +1,24 @@
+"""llava-next-34b — VLM: anyres-tiled vision frontend (stubbed) feeding a
+dense GQA language backbone [hf:llava-hf/llava-v1.6-mistral-7b-hf scaled to
+the 34B backbone]. The ViT/projector is the allowed stub: `input_specs`
+supplies (B, P, d) patch embeddings; the backbone prepends them to the text
+tokens (early-fusion layout).
+"""
+from repro.configs.base import ModelConfig
+
+# anyres tiling: 1 base + 4 tiles of 24x24=576 patches each = 2880 patch slots
+FRONTEND_TOKENS = 2880
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    arch_type="vlm",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,  # not divisible by tp=16 -> attn_fan fallback
+    num_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64000,
+    frontend="vision_patches",
+    frontend_tokens=FRONTEND_TOKENS,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf (anyres tiling; 34B backbone)",
+)

@@ -1,0 +1,17 @@
+"""qwen2-0.5b — dense GQA with QKV bias, tied embeddings [arXiv:2407.10671]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b",
+    arch_type="dense",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,  # not divisible by tp=16 -> attn_fan row/col-parallel fallback
+    num_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151936,
+    qkv_bias=True,
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    source="arXiv:2407.10671 (Qwen2 Technical Report)",
+)

@@ -1,0 +1,23 @@
+"""recurrentgemma-9b — hybrid Griffin stack: RG-LRU recurrent blocks + local
+(sliding-window) attention in a 2:1 cycle [arXiv:2402.19427]. MQA (kv=1).
+
+Sub-quadratic by construction: the recurrent state is O(1) and local
+attention is O(window) per token => long_500k runs natively.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    arch_type="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,  # MQA on the local-attention layers
+    d_ff=12288,
+    vocab_size=256000,
+    block_pattern=("rglru", "rglru", "local"),  # 1 attn per 2 recurrent
+    window_size=2048,
+    rnn_width=4096,  # lru_width
+    conv_kernel=4,
+    source="arXiv:2402.19427 (Griffin / RecurrentGemma)",
+)

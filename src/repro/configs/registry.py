@@ -1,0 +1,81 @@
+"""``--arch <id>`` resolution: one module per assigned architecture."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+from repro.configs.granite_20b import CONFIG as GRANITE_20B
+from repro.configs.qwen2_0_5b import CONFIG as QWEN2_0_5B
+from repro.configs.llava_next_34b import CONFIG as LLAVA_NEXT_34B
+from repro.configs.hubert_xlarge import CONFIG as HUBERT_XLARGE
+from repro.configs.yi_6b import CONFIG as YI_6B
+from repro.configs.xlstm_1_3b import CONFIG as XLSTM_1_3B
+from repro.configs.llama4_scout_17b_a16e import CONFIG as LLAMA4_SCOUT
+from repro.configs.qwen2_72b import CONFIG as QWEN2_72B
+from repro.configs.phi3_5_moe_42b_a6_6b import CONFIG as PHI35_MOE
+from repro.configs.recurrentgemma_9b import CONFIG as RECURRENTGEMMA_9B
+from repro.configs.grm import GRM_LARGE_110G, GRM_SMALL_4G
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        GRANITE_20B,
+        QWEN2_0_5B,
+        LLAVA_NEXT_34B,
+        HUBERT_XLARGE,
+        YI_6B,
+        XLSTM_1_3B,
+        LLAMA4_SCOUT,
+        QWEN2_72B,
+        PHI35_MOE,
+        RECURRENTGEMMA_9B,
+        GRM_SMALL_4G,
+        GRM_LARGE_110G,
+    )
+}
+
+ASSIGNED = tuple(
+    n for n in ARCHS if not n.startswith("grm")
+)  # the 10 pool architectures
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+# Sliding-window size for the long_500k variant of pure full-attention archs
+# (per instructions: dense archs run long_500k only through a sub-quadratic
+# variant — ours is sliding-window attention with a ring-buffer cache).
+LONG_CONTEXT_WINDOW = 8192
+
+
+def is_subquadratic(cfg: ModelConfig) -> bool:
+    """True when decode cost/token is O(1) or O(window) natively."""
+    kinds = set(cfg.pattern)
+    return bool(kinds and kinds.issubset({"mlstm", "slstm", "rglru", "local"}))
+
+
+def long_context_variant(cfg: ModelConfig) -> ModelConfig:
+    """The arch used for long_500k: native if sub-quadratic, else the
+    sliding-window variant of the same family."""
+    if is_subquadratic(cfg):
+        return cfg
+    pattern = tuple("local" if k == "attn" else k for k in cfg.pattern)
+    cycle = tuple("local" if k == "attn" else k for k in (cfg.block_pattern or ("attn",)))
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "+swa",
+        window_size=LONG_CONTEXT_WINDOW,
+        block_pattern=cycle,
+    )
+
+
+def supports_shape(cfg: ModelConfig, shape_name: str) -> bool:
+    """The documented skips: encoder-only archs have no decode step."""
+    if cfg.is_encoder_only and shape_name in ("decode_32k", "long_500k"):
+        return False
+    return True

@@ -1,0 +1,24 @@
+"""xlstm-1.3b — sLSTM + mLSTM block stack (attention-free SSM family)
+[arXiv:2405.04517]. xLSTM[7:1] ratio: every 8th block is sLSTM. d_ff=0: the
+blocks carry their own pre/post up-projections (rnn_width = 2 * d_model for
+mLSTM inner dim).
+
+Decode is O(1)/token via the recurrent state cache => long_500k runs
+natively (no sliding-window workaround needed).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    arch_type="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,  # block-internal projections only
+    vocab_size=50304,
+    block_pattern=("mlstm",) * 7 + ("slstm",),  # xLSTM[7:1]
+    rnn_width=4096,  # 2 * d_model mLSTM inner dim
+    conv_kernel=4,
+    source="arXiv:2405.04517 (xLSTM)",
+)

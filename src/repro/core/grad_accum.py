@@ -1,0 +1,85 @@
+"""Sparse gradient accumulation (paper §5.2).
+
+Per batch, the system records (activated embedding row, gradient) pairs;
+gradients of identical rows across the accumulation window are *summed*
+("sparse aggregation") and applied collectively — avoiding full-table updates
+and the memory waste of dense accumulators.
+
+Mechanics: sort the row ids, then segment-sum the co-sorted gradient rows —
+the sorted layout makes the reduction sequential-friendly; on TPU it runs as
+the `kernels/seg_sum.py` Pallas kernel (VMEM-tiled scan), with the jnp
+scatter-add oracle as fallback (kernels/ops.py dispatch).
+
+API (all static shapes):
+
+    acc = init_accumulator(slots, dim)
+    acc = accumulate(acc, rows, grads)     # per micro-batch
+    uniq_rows, summed = drain(acc, out_slots)   # -> rowwise_adam.update
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+class SparseGradAccum(NamedTuple):
+    rows: jax.Array  # (slots,) int32 touched row per entry (-1 free)
+    grads: jax.Array  # (slots, d) fp32 gradient per entry
+    fill: jax.Array  # () int32 entries used
+
+
+def init_accumulator(slots: int, dim: int) -> SparseGradAccum:
+    return SparseGradAccum(
+        jnp.full((slots,), -1, jnp.int32),
+        jnp.zeros((slots, dim), jnp.float32),
+        jnp.int32(0),
+    )
+
+
+def accumulate(acc: SparseGradAccum, rows: jax.Array, grads: jax.Array) -> SparseGradAccum:
+    """Append one micro-batch of (row, grad) pairs (rows may repeat; -1 = pad).
+
+    Entries beyond capacity are dropped (size the accumulator for the
+    accumulation window: slots >= sum of per-micro-batch touched rows).
+    """
+    n = rows.shape[0]
+    valid = rows >= 0
+    pos = acc.fill + jnp.cumsum(valid.astype(jnp.int32)) - 1
+    ok = valid & (pos < acc.rows.shape[0])
+    idx = jnp.where(ok, pos, acc.rows.shape[0])
+    new_rows = acc.rows.at[idx].set(jnp.where(ok, rows, -1), mode="drop")
+    new_grads = acc.grads.at[idx].set(
+        jnp.where(ok[:, None], grads.astype(jnp.float32), 0.0), mode="drop"
+    )
+    fill = jnp.minimum(acc.fill + jnp.sum(valid.astype(jnp.int32)),
+                       acc.rows.shape[0])
+    return SparseGradAccum(new_rows, new_grads, fill)
+
+
+def drain(
+    acc: SparseGradAccum, out_slots: int, *, impl: str = "auto"
+) -> Tuple[jax.Array, jax.Array, SparseGradAccum]:
+    """Aggregate duplicates: (unique rows, summed grads, reset accumulator).
+
+    Sort-by-row + sorted segment-sum (the Pallas kernel on TPU). out_slots is
+    the static unique capacity (<= slots).
+    """
+    slots, d = acc.grads.shape
+    # Sort ids ascending with -1 (free) entries last (use +inf key).
+    key = jnp.where(acc.rows >= 0, acc.rows, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key)
+    srows, sgrads = acc.rows[order], acc.grads[order]
+    # Unique rows (static size) + segment index per sorted entry.
+    uniq = jnp.unique(
+        jnp.where(srows >= 0, srows, jnp.iinfo(jnp.int32).max),
+        size=out_slots, fill_value=jnp.iinfo(jnp.int32).max,
+    )
+    seg = jnp.searchsorted(uniq, jnp.where(srows >= 0, srows, jnp.iinfo(jnp.int32).max))
+    seg = jnp.where(srows >= 0, seg, out_slots).astype(jnp.int32)  # pad -> dropped
+    summed = ops.seg_sum(sgrads, seg, out_slots, impl=impl)
+    uniq_rows = jnp.where(uniq == jnp.iinfo(jnp.int32).max, -1, uniq).astype(jnp.int32)
+    return uniq_rows, summed, init_accumulator(slots, d)

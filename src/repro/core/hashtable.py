@@ -1,0 +1,478 @@
+"""Dynamic hash embedding table (paper §4.1), functional JAX implementation.
+
+Faithful elements
+-----------------
+* **Decoupled storage** (Fig. 6a): a compact *key structure* — ``keys`` plus a
+  row-pointer array ``rows`` (the "pointer" column) — separate from the
+  *embedding structure* ``emb`` with per-row eviction metadata (``counters``,
+  ``timestamps``).
+* **MurmurHash3** (§4.1): the 64-bit fmix64 finalizer cascade, vectorized.
+* **Grouped parallel probing** (Eq. 5): step
+  ``S = ((k % (M/G - 1) + 1) | 1) * G``. With ``M = 2**n`` and group count
+  ``G = 2**g``, each key probes inside its residue class ``h0 mod G``; the
+  per-class stride ``S/G`` is odd, so by Theorem 1 the probe sequence covers
+  the whole class. On GPU the groups are warps; on TPU we keep the identical
+  arithmetic but issue each probe round as one *vectorized* HBM gather over
+  all pending IDs (see DESIGN.md §6 for why this beats a Pallas port).
+* **Chunked embedding allocation + dual-chunk expansion** (Fig. 6c): the
+  embedding structure grows by whole chunks; a spare ("next") chunk is kept
+  pre-allocated so claims never stall. Key-structure expansion doubles ``M``
+  and migrates *only keys and pointers* — embedding rows never move.
+
+TPU adaptation (DESIGN.md §2)
+-----------------------------
+CUDA inserts race via atomic CAS; we use **round-synchronous parallel
+insertion**: every pending ID proposes its current slot, conflicts are
+resolved with a scatter-min (lowest candidate index wins — deterministic),
+winners claim, losers advance by their stride. All rounds are fully
+vectorized; `max_probes` bounds the loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EMPTY = jnp.int64(-1)  # sentinel key: never occupied (probe chains stop here)
+TOMBSTONE = jnp.int64(-2)  # sentinel key: evicted (probe chains continue)
+NO_ROW = jnp.int32(-1)  # sentinel row for "not found"
+
+
+@dataclasses.dataclass(frozen=True)
+class HashTableConfig:
+    capacity: int  # M: number of key slots, power of two
+    embed_dim: int
+    chunk_rows: int = 4096  # embedding-structure chunk size (bulk allocation)
+    num_groups: int = 8  # G in Eq. 5 (power of two)
+    max_probes: int = 128
+    max_load_factor: float = 0.75  # §4.1: expansion trigger
+    dtype: jnp.dtype = jnp.float32
+    init_scale: float = 0.02
+
+    def __post_init__(self):
+        assert self.capacity & (self.capacity - 1) == 0, "capacity must be 2**n"
+        assert self.num_groups & (self.num_groups - 1) == 0, "groups must be 2**g"
+        assert self.capacity // self.num_groups > 1
+
+
+class HashTableState(NamedTuple):
+    """Pure-functional table state (a pytree; shardable row-wise)."""
+
+    keys: jax.Array  # (M,)  int64, EMPTY where unoccupied
+    rows: jax.Array  # (M,)  int32, pointer into `emb` (the key structure's pointer column)
+    emb: jax.Array  # (R, d) embedding structure (R grows in chunks)
+    counters: jax.Array  # (R,)  int32 access counts (LFU / hot-cold split)
+    timestamps: jax.Array  # (R,)  int32 last-access step (LRU)
+    next_row: jax.Array  # ()    int32 allocation cursor into emb
+    size: jax.Array  # ()    int32 number of occupied key slots
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def row_capacity(self) -> int:
+        return self.emb.shape[0]
+
+
+def murmur3_fmix64(x: jax.Array) -> jax.Array:
+    """MurmurHash3 64-bit finalizer (Appleby): full avalanche on 64-bit lanes."""
+    h = x.astype(jnp.uint64)
+    h = h ^ (h >> 33)
+    h = h * jnp.uint64(0xFF51AFD7ED558CCD)
+    h = h ^ (h >> 33)
+    h = h * jnp.uint64(0xC4CEB9FE1A85EC53)
+    h = h ^ (h >> 33)
+    return h
+
+
+def probe_params(ids: jax.Array, capacity: int, num_groups: int) -> Tuple[jax.Array, jax.Array]:
+    """Initial slot h0 and stride S per Eq. 5.
+
+    S = ((k % (M/G - 1) + 1) | 1) * G, h0 = murmur(k) % M. Each key stays in
+    residue class (h0 mod G); stride/G is odd => full class coverage (Thm. 1).
+    """
+    m, g = capacity, num_groups
+    h = murmur3_fmix64(ids)
+    h0 = (h % jnp.uint64(m)).astype(jnp.int64)
+    k = ids.astype(jnp.uint64)
+    s = (((k % jnp.uint64(m // g - 1)) + jnp.uint64(1)) | jnp.uint64(1)) * jnp.uint64(g)
+    return h0, s.astype(jnp.int64)
+
+
+def create(cfg: HashTableConfig, key: Optional[jax.Array] = None) -> HashTableState:
+    """Fresh table with one current + one spare ("next") chunk pre-allocated."""
+    rows0 = 2 * cfg.chunk_rows
+    if key is None:
+        emb = jnp.zeros((rows0, cfg.embed_dim), cfg.dtype)
+    else:
+        emb = (
+            jax.random.normal(key, (rows0, cfg.embed_dim), jnp.float32) * cfg.init_scale
+        ).astype(cfg.dtype)
+    return HashTableState(
+        keys=jnp.full((cfg.capacity,), EMPTY, jnp.int64),
+        rows=jnp.full((cfg.capacity,), NO_ROW, jnp.int32),
+        emb=emb,
+        counters=jnp.zeros((rows0,), jnp.int32),
+        timestamps=jnp.zeros((rows0,), jnp.int32),
+        next_row=jnp.int32(0),
+        size=jnp.int32(0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Lookup (Fig. 6b): hash -> probe -> slot -> pointer -> embedding row.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def find_rows(state: HashTableState, ids: jax.Array, cfg: HashTableConfig) -> jax.Array:
+    """Vectorized probe loop: row index per ID (NO_ROW when absent/padding).
+
+    Padding convention: ids == EMPTY are ignored. Each while-loop round is a
+    single gather over all still-pending IDs (TPU-native probing, DESIGN.md §6).
+    """
+    n = ids.shape[0]
+    h0, stride = probe_params(ids, state.capacity, cfg.num_groups)
+    is_query = ids != EMPTY
+    mcap = jnp.int64(state.capacity)
+
+    def cond(carry):
+        t, pending, _ = carry
+        return jnp.logical_and(t < cfg.max_probes, jnp.any(pending))
+
+    def body(carry):
+        t, pending, rows = carry
+        slot = ((h0 + t * stride) % mcap).astype(jnp.int32)
+        slot_key = state.keys[slot]
+        hit = pending & (slot_key == ids)
+        miss = pending & (slot_key == EMPTY)  # empty => absent; TOMBSTONE
+        rows = jnp.where(hit, state.rows[slot], rows)  # slots keep probing
+        pending = pending & ~hit & ~miss
+        return t + 1, pending, rows
+
+    _, _, rows = jax.lax.while_loop(
+        cond, body, (jnp.int64(0), is_query, jnp.full((n,), NO_ROW, jnp.int32))
+    )
+    return rows
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def lookup(
+    state: HashTableState, ids: jax.Array, cfg: HashTableConfig, step: jax.Array | int = 0
+) -> Tuple[jax.Array, HashTableState]:
+    """Embedding fetch + eviction-metadata update (counters/timestamps)."""
+    rows = find_rows(state, ids, cfg)
+    found = rows != NO_ROW
+    safe = jnp.where(found, rows, 0)
+    vecs = jnp.where(found[:, None], state.emb[safe], 0).astype(cfg.dtype)
+    counters = state.counters.at[safe].add(found.astype(jnp.int32))
+    timestamps = state.timestamps.at[safe].max(
+        jnp.where(found, jnp.int32(step), jnp.int32(0))
+    )
+    return vecs, state._replace(counters=counters, timestamps=timestamps)
+
+
+# ---------------------------------------------------------------------------
+# Round-synchronous parallel insertion (TPU equivalent of CUDA CAS racing).
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def insert(
+    state: HashTableState, ids: jax.Array, cfg: HashTableConfig
+) -> Tuple[HashTableState, jax.Array, jax.Array]:
+    """Insert a batch of (possibly duplicate, EMPTY-padded) IDs.
+
+    Returns (new_state, rows, overflowed) where rows[i] is the embedding row
+    for ids[i] (NO_ROW for padding or if the table ran out of probes/rows) and
+    `overflowed` is a scalar count of IDs that could not be placed — the host
+    wrapper reacts by expanding (capacity or chunk) and retrying.
+    """
+    n = ids.shape[0]
+    uids, inv = jnp.unique(
+        ids, size=n, fill_value=EMPTY, return_inverse=True
+    )  # dedup before probing — duplicate IDs must land on one slot
+    # Phase 1: resolve already-present IDs (skips tombstones correctly) so
+    # the claim loop below may safely take the first EMPTY/TOMBSTONE slot.
+    found0 = find_rows(state, uids, cfg)
+    h0, stride = probe_params(uids, state.capacity, cfg.num_groups)
+    pending = (uids != EMPTY) & (found0 == NO_ROW)
+    mcap = jnp.int64(state.capacity)
+    m = state.capacity
+
+    def cond(carry):
+        t, pending, *_ = carry
+        return jnp.logical_and(t < cfg.max_probes, jnp.any(pending))
+
+    def body(carry):
+        t, pending, rows, keys, rowptr, next_row, size = carry
+        slot = ((h0 + t * stride) % mcap).astype(jnp.int32)
+        slot_key = keys[slot]
+        hit = pending & (slot_key == uids)
+        rows = jnp.where(hit, rowptr[slot], rows)
+        pending = pending & ~hit
+
+        # Claim attempt on free slots (EMPTY or evicted TOMBSTONE): conflicts
+        # (several pending IDs proposing the same slot this round) resolved
+        # by scatter-min of candidate index.
+        wants = pending & ((slot_key == EMPTY) | (slot_key == TOMBSTONE))
+        proposal = jnp.where(wants, slot, m)  # m = out-of-range, never written
+        winner_idx = (
+            jnp.full((m + 1,), n, jnp.int32)
+            .at[proposal]
+            .min(jnp.arange(n, dtype=jnp.int32))[:-1]
+        )
+        won = wants & (winner_idx[jnp.where(wants, slot, 0)] == jnp.arange(n))
+
+        # Row allocation for winners, bounded by current chunked capacity.
+        rank = jnp.cumsum(won.astype(jnp.int32)) - 1
+        new_row = next_row + rank
+        can_alloc = won & (new_row < state.row_capacity)
+        claim = can_alloc
+        keys = keys.at[jnp.where(claim, slot, m)].set(
+            jnp.where(claim, uids, EMPTY), mode="drop"
+        )
+        rowptr = rowptr.at[jnp.where(claim, slot, m)].set(
+            jnp.where(claim, new_row.astype(jnp.int32), NO_ROW), mode="drop"
+        )
+        rows = jnp.where(claim, new_row.astype(jnp.int32), rows)
+        n_claimed = jnp.sum(claim.astype(jnp.int32)).astype(jnp.int32)
+        pending = pending & ~claim
+        # Losers of the conflict retry the SAME slot next round only if someone
+        # else claimed it with a different key; their (slot_key == EMPTY) test
+        # will then fail and they advance. IDs that couldn't allocate a row
+        # stay pending and surface in the overflow count.
+        return t + 1, pending, rows, keys, rowptr, next_row + n_claimed, size + n_claimed
+
+    init = (
+        jnp.int64(0),
+        pending,
+        found0,  # phase-1 hits pre-filled; claim loop fills the rest
+        state.keys,
+        state.rows,
+        state.next_row,
+        state.size,
+    )
+    _, still_pending, urows, keys, rowptr, next_row, size = jax.lax.while_loop(
+        cond, body, init
+    )
+    overflow = jnp.sum(still_pending.astype(jnp.int32))
+    rows = jnp.where(ids != EMPTY, urows[inv], NO_ROW)
+    new_state = state._replace(
+        keys=keys, rows=rowptr, next_row=next_row, size=size
+    )
+    return new_state, rows, overflow
+
+
+# ---------------------------------------------------------------------------
+# Capacity expansion (Fig. 6c).
+# ---------------------------------------------------------------------------
+
+
+def needs_expansion(state: HashTableState, cfg: HashTableConfig) -> bool:
+    return bool(state.size >= int(cfg.max_load_factor * state.capacity))
+
+
+def needs_chunk(state: HashTableState, cfg: HashTableConfig) -> bool:
+    """Spare-chunk invariant: keep >= one whole chunk of free rows ahead."""
+    return bool(int(state.next_row) > state.row_capacity - cfg.chunk_rows)
+
+
+@partial(jax.jit, static_argnames=("cfg", "new_capacity"))
+def _migrate_keys(
+    state: HashTableState, cfg: HashTableConfig, new_capacity: int
+) -> HashTableState:
+    """Double the key structure; re-probe keys into it. Embeddings DO NOT move —
+    only (key, pointer) pairs migrate, the paper's headline expansion trick.
+    Tombstones (evicted slots) are purged by the rehash — the standard
+    open-addressing cleanup."""
+    occupied = state.keys >= 0  # excludes EMPTY and TOMBSTONE
+    live_keys = jnp.where(occupied, state.keys, EMPTY)
+    live_rows = jnp.where(occupied, state.rows, NO_ROW)
+
+    h0, stride = probe_params(live_keys, new_capacity, cfg.num_groups)
+    mcap = jnp.int64(new_capacity)
+    m_old = state.capacity
+    new_keys = jnp.full((new_capacity,), EMPTY, jnp.int64)
+    new_rows = jnp.full((new_capacity,), NO_ROW, jnp.int32)
+    pending = occupied
+
+    def cond(c):
+        t, pending, *_ = c
+        return jnp.logical_and(t < cfg.max_probes, jnp.any(pending))
+
+    def body(c):
+        t, pending, nk, nr = c
+        slot = ((h0 + t * stride) % mcap).astype(jnp.int32)
+        wants = pending & (nk[slot] == EMPTY)
+        proposal = jnp.where(wants, slot, new_capacity)
+        winner = (
+            jnp.full((new_capacity + 1,), m_old, jnp.int32)
+            .at[proposal]
+            .min(jnp.arange(m_old, dtype=jnp.int32))[:-1]
+        )
+        won = wants & (winner[jnp.where(wants, slot, 0)] == jnp.arange(m_old))
+        nk = nk.at[jnp.where(won, slot, new_capacity)].set(
+            jnp.where(won, live_keys, EMPTY), mode="drop"
+        )
+        nr = nr.at[jnp.where(won, slot, new_capacity)].set(
+            jnp.where(won, live_rows, NO_ROW), mode="drop"
+        )
+        return t + 1, pending & ~won, nk, nr
+
+    _, left, new_keys, new_rows = jax.lax.while_loop(
+        cond, body, (jnp.int64(0), pending, new_keys, new_rows)
+    )
+    # With load factor <= 0.75 and doubling, max_probes rounds always suffice;
+    # assert via debug check (left must be empty).
+    return state._replace(keys=new_keys, rows=new_rows)
+
+
+def expand_keys(state: HashTableState, cfg: HashTableConfig) -> Tuple[HashTableState, HashTableConfig]:
+    """Power-of-two key-structure doubling (§4.1 'capacity expansion')."""
+    new_capacity = state.capacity * 2
+    new_state = _migrate_keys(state, cfg, new_capacity)
+    return new_state, dataclasses.replace(cfg, capacity=new_capacity)
+
+
+def grow_chunk(state: HashTableState, cfg: HashTableConfig) -> HashTableState:
+    """Dual-chunk embedding growth: append one pre-allocated chunk (Fig. 6c)."""
+    pad = cfg.chunk_rows
+    return state._replace(
+        emb=jnp.concatenate(
+            [state.emb, jnp.zeros((pad, cfg.embed_dim), state.emb.dtype)], axis=0
+        ),
+        counters=jnp.concatenate([state.counters, jnp.zeros((pad,), jnp.int32)]),
+        timestamps=jnp.concatenate([state.timestamps, jnp.zeros((pad,), jnp.int32)]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Eviction (§4.1: the embedding structure carries counters/timestamps
+# "required for eviction policies like Least Recently Used and Least
+# Frequently Used"). Eviction frees key slots + embedding rows; freed rows
+# are recycled through a compaction of the row space.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_evict", "policy"))
+def evict(
+    state: HashTableState,
+    cfg: HashTableConfig,
+    n_evict: int,
+    policy: str = "lfu",
+    current_step: jax.Array | int = 0,
+) -> Tuple[HashTableState, jax.Array]:
+    """Evict the n_evict coldest rows (LFU: lowest counter; LRU: oldest
+    timestamp), clear their key slots, and compact the surviving rows to a
+    contiguous prefix so `next_row` allocation stays valid.
+
+    Returns (new_state, evicted_count). Ties broken by row index
+    (deterministic). Rows never touched (beyond next_row) are not eligible.
+    """
+    R = state.row_capacity
+    live = jnp.arange(R, dtype=jnp.int32) < state.next_row
+    if policy == "lfu":
+        score = jnp.where(live, state.counters, jnp.iinfo(jnp.int32).max)
+    elif policy == "lru":
+        score = jnp.where(live, state.timestamps, jnp.iinfo(jnp.int32).max)
+    else:
+        raise ValueError(policy)
+    order = jnp.argsort(score, stable=True)  # coldest first
+    victim_rows = order[:n_evict]
+    is_victim_row = jnp.zeros((R,), bool).at[victim_rows].set(True) & live
+
+    # Clear key slots pointing at victims. TOMBSTONE, not EMPTY: probe
+    # chains of surviving keys may pass through the evicted slot.
+    slot_live = state.keys >= 0
+    slot_row = jnp.where(slot_live, state.rows, 0)
+    slot_victim = slot_live & is_victim_row[slot_row]
+    keys = jnp.where(slot_victim, TOMBSTONE, state.keys)
+    rows = jnp.where(slot_victim, NO_ROW, state.rows)
+
+    # Compact surviving rows to a contiguous prefix; remap pointers.
+    survive = live & ~is_victim_row
+    new_index = jnp.cumsum(survive.astype(jnp.int32)) - 1  # row -> new row
+    n_live = jnp.sum(survive.astype(jnp.int32))
+    dest = jnp.where(survive, new_index, R)
+    emb = jnp.zeros_like(state.emb).at[dest].set(state.emb, mode="drop")
+    counters = jnp.zeros_like(state.counters).at[dest].set(
+        state.counters, mode="drop")
+    timestamps = jnp.zeros_like(state.timestamps).at[dest].set(
+        state.timestamps, mode="drop")
+    rows = jnp.where(rows != NO_ROW, new_index[jnp.where(rows != NO_ROW, rows, 0)],
+                     NO_ROW).astype(jnp.int32)
+
+    evicted = jnp.sum(slot_victim.astype(jnp.int32))
+    new_state = HashTableState(
+        keys=keys, rows=rows, emb=emb, counters=counters,
+        timestamps=timestamps, next_row=n_live.astype(jnp.int32),
+        size=state.size - evicted,
+    )
+    return new_state, evicted
+
+
+# ---------------------------------------------------------------------------
+# Host-side stateful wrapper: owns expansion/retry (out-of-jit control plane).
+# ---------------------------------------------------------------------------
+
+
+class DynamicHashTable:
+    """Stateful convenience wrapper used by the data/training control plane.
+
+    The jitted data plane (find/insert/lookup) stays functional; this class
+    implements the paper's host-side policies: load-factor-triggered key
+    expansion, spare-chunk maintenance, and insert retry after growth.
+    """
+
+    def __init__(self, cfg: HashTableConfig, key: Optional[jax.Array] = None):
+        self.cfg = cfg
+        self.state = create(cfg, key)
+
+    def insert(self, ids: jax.Array) -> jax.Array:
+        for _attempt in range(16):
+            self._pre_grow(ids.size)
+            self.state, rows, overflow = insert(self.state, ids, self.cfg)
+            if int(overflow) == 0:
+                return rows
+            # Could not place everything. Distinguish the two causes: the
+            # embedding structure ran out of rows (grow chunks to cover the
+            # shortfall) vs. probe exhaustion under high load (double keys).
+            shortfall = int(overflow)
+            free = self.state.row_capacity - int(self.state.next_row)
+            if free < shortfall + self.cfg.chunk_rows:
+                for _ in range((shortfall + self.cfg.chunk_rows - free) // self.cfg.chunk_rows + 1):
+                    self.state = grow_chunk(self.state, self.cfg)
+            else:
+                self.state, self.cfg = expand_keys(self.state, self.cfg)
+        raise RuntimeError("hash table insert failed after 16 expansions")
+
+    def _pre_grow(self, batch_size: int) -> None:
+        """Maintain the spare-chunk and load-factor invariants ahead of an
+        insert of up to `batch_size` new IDs (host control plane, §4.1)."""
+        while needs_chunk(self.state, self.cfg):
+            self.state = grow_chunk(self.state, self.cfg)
+        while int(self.state.size) + batch_size >= int(
+            self.cfg.max_load_factor * self.cfg.capacity
+        ):
+            self.state, self.cfg = expand_keys(self.state, self.cfg)
+
+    def lookup(self, ids: jax.Array, step: int = 0) -> jax.Array:
+        vecs, self.state = lookup(self.state, ids, self.cfg, step)
+        return vecs
+
+    def find_rows(self, ids: jax.Array) -> jax.Array:
+        return find_rows(self.state, ids, self.cfg)
+
+    def evict(self, n: int, policy: str = "lfu", step: int = 0) -> int:
+        """Evict the n coldest entries (host-cadence, like expansion)."""
+        self.state, count = evict(self.state, self.cfg, n, policy, step)
+        return int(count)
+
+    def __len__(self) -> int:
+        return int(self.state.size)

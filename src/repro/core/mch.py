@@ -1,0 +1,113 @@
+"""Managed Collision Handling (MCH) — TorchRec's dynamic-ID baseline (Table 3).
+
+MCH keeps a fixed-size *sorted* remap table mapping raw feature IDs to a
+contiguous embedding index space, locates IDs by binary search, and evicts
+the least-frequently-used mapping when the table is full. The paper compares
+its dynamic hash table against this and reports 1.47x–2.22x higher throughput
+plus OOM-avoidance; we reproduce the mechanism for `benchmarks/dynamic_table.py`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int64(jnp.iinfo(jnp.int64).max)  # sorts last => live prefix stays sorted
+
+
+@dataclasses.dataclass(frozen=True)
+class MCHConfig:
+    capacity: int  # fixed remap-table size (preallocated!)
+    embed_dim: int
+    dtype: jnp.dtype = jnp.float32
+    init_scale: float = 0.02
+
+
+class MCHState(NamedTuple):
+    sorted_ids: jax.Array  # (capacity,) int64, ascending, EMPTY-padded tail
+    slot_of: jax.Array  # (capacity,) int32: embedding row per sorted position
+    freq: jax.Array  # (capacity,) int32 access frequency per sorted position
+    emb: jax.Array  # (capacity, d) — fully preallocated (the OOM risk in Table 3)
+    used: jax.Array  # () int32
+
+
+def create(cfg: MCHConfig, key: Optional[jax.Array] = None) -> MCHState:
+    shape = (cfg.capacity, cfg.embed_dim)
+    emb = (
+        jnp.zeros(shape, cfg.dtype)
+        if key is None
+        else (jax.random.normal(key, shape, jnp.float32) * cfg.init_scale).astype(cfg.dtype)
+    )
+    return MCHState(
+        sorted_ids=jnp.full((cfg.capacity,), EMPTY, jnp.int64),
+        slot_of=jnp.arange(cfg.capacity, dtype=jnp.int32),
+        freq=jnp.zeros((cfg.capacity,), jnp.int32),
+        emb=emb,
+        used=jnp.int32(0),
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def find(state: MCHState, ids: jax.Array, cfg: MCHConfig) -> jax.Array:
+    """Binary-search localization (the paper's description of MCH)."""
+    pos = jnp.searchsorted(state.sorted_ids, ids)
+    pos = jnp.clip(pos, 0, cfg.capacity - 1)
+    hit = state.sorted_ids[pos] == ids
+    return jnp.where(hit, state.slot_of[pos], -1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def insert(state: MCHState, ids: jax.Array, cfg: MCHConfig) -> MCHState:
+    """Insert new IDs; when full, evict lowest-frequency mappings first.
+
+    Implemented as a full rebuild of the sorted remap table (merge + top-K by
+    frequency). This is O(C log C) per insert batch — intentionally honest
+    about MCH's cost profile versus the hash table's O(batch) probing.
+    """
+    uids, _ = jnp.unique(ids, size=ids.shape[0], fill_value=EMPTY, return_inverse=True)
+    is_new = (find(state, uids, cfg) < 0) & (uids != EMPTY) & (uids >= 0)
+    cand_ids = jnp.where(is_new, uids, EMPTY)
+    # Merge: existing (id, slot, freq) + candidates (freq=1, slot=unassigned=-1)
+    all_ids = jnp.concatenate([state.sorted_ids, cand_ids])
+    all_freq = jnp.concatenate([state.freq, jnp.ones_like(cand_ids, jnp.int32)])
+    all_slot = jnp.concatenate([state.slot_of, jnp.full_like(cand_ids, -1, jnp.int32)])
+    valid = all_ids != EMPTY
+    # Keep top-capacity by frequency (evict LFU); stable tie-break by id order.
+    order = jnp.lexsort((all_ids, jnp.where(valid, -all_freq, jnp.iinfo(jnp.int32).max)))
+    keep = order[: cfg.capacity]
+    kept_ids, kept_freq, kept_slot = all_ids[keep], all_freq[keep], all_slot[keep]
+    kept_ids = jnp.where(kept_freq > 0, kept_ids, EMPTY)
+    # Re-sort kept entries by id for binary search.
+    sort = jnp.argsort(kept_ids)
+    kept_ids, kept_freq, kept_slot = kept_ids[sort], kept_freq[sort], kept_slot[sort]
+    # Assign embedding rows to newcomers: reuse rows freed by evicted entries.
+    have_slot = kept_slot >= 0
+    used_mask = jnp.zeros((cfg.capacity,), bool).at[jnp.where(have_slot, kept_slot, 0)].set(
+        have_slot, mode="drop"
+    )
+    free_rows = jnp.argsort(used_mask)  # False (free) rows first
+    need = (~have_slot) & (kept_ids != EMPTY)
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1
+    new_slot = free_rows[jnp.clip(rank, 0, cfg.capacity - 1)].astype(jnp.int32)
+    kept_slot = jnp.where(need, new_slot, kept_slot)
+    return MCHState(
+        sorted_ids=kept_ids,
+        slot_of=kept_slot,
+        freq=kept_freq,
+        emb=state.emb,
+        used=jnp.sum(kept_ids != EMPTY).astype(jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def lookup(state: MCHState, ids: jax.Array, cfg: MCHConfig) -> Tuple[jax.Array, MCHState]:
+    pos = jnp.searchsorted(state.sorted_ids, ids)
+    pos = jnp.clip(pos, 0, cfg.capacity - 1)
+    hit = state.sorted_ids[pos] == ids
+    rows = jnp.where(hit, state.slot_of[pos], 0)
+    vecs = jnp.where(hit[..., None], state.emb[rows], 0)
+    freq = state.freq.at[jnp.where(hit, pos, cfg.capacity)].add(1, mode="drop")
+    return vecs, state._replace(freq=freq)

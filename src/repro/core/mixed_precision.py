@@ -1,0 +1,119 @@
+"""Hot/cold mixed-precision embedding policy (paper §5.2).
+
+The paper keeps *hot* (frequently updated) embedding rows in fp32 — frequent
+gradient updates accumulate quantization error in reduced precision — and
+stores *cold* rows in half precision to cut memory and lookup bandwidth.
+TPU adaptation: fp16 -> bf16 (no fast fp16 path on TPU; DESIGN.md §2).
+
+The hash table already maintains per-row access `counters` (§4.1 eviction
+metadata), so hotness is free: rows with counter >= threshold (or the top-k%)
+are hot. Storage is a *split pool*: one fp32 array for hot rows, one bf16
+array for cold rows, with a sign-tagged indirection row -> (pool, slot).
+Lookups gather from both pools and select; `repartition` migrates rows
+between pools as access patterns drift (a host-cadence operation, like
+expansion).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    hot_fraction: float = 0.1  # top fraction of rows by access count kept fp32
+    min_count: int = 2  # rows accessed fewer times are always cold
+    cold_dtype: jnp.dtype = jnp.bfloat16
+
+
+class SplitPrecisionTable(NamedTuple):
+    hot: jax.Array  # (H, d) fp32
+    cold: jax.Array  # (C, d) cold_dtype
+    loc: jax.Array  # (rows,) int32: slot if hot else -(slot+1) if cold
+
+    @property
+    def num_rows(self) -> int:
+        return self.loc.shape[0]
+
+
+def classify_hot(counters: jax.Array, policy: PrecisionPolicy) -> jax.Array:
+    """Boolean hot mask from the table's access counters (LFU metadata)."""
+    n = counters.shape[0]
+    k = max(1, int(policy.hot_fraction * n))
+    kth = jnp.sort(counters)[-k]
+    return (counters >= jnp.maximum(kth, policy.min_count))
+
+
+def build_split(
+    emb: jax.Array, counters: jax.Array, policy: PrecisionPolicy
+) -> SplitPrecisionTable:
+    """Partition a dense fp32 table into hot fp32 / cold bf16 pools.
+
+    Pool sizes are static (= rows) so the result stays jit-stable; the unused
+    tail of each pool is zero. Host-cadence operation (like expansion).
+    """
+    rows, d = emb.shape
+    hot_mask = classify_hot(counters, policy)
+    hot_slot = jnp.cumsum(hot_mask.astype(jnp.int32)) - 1
+    cold_slot = jnp.cumsum((~hot_mask).astype(jnp.int32)) - 1
+    loc = jnp.where(hot_mask, hot_slot, -(cold_slot + 1)).astype(jnp.int32)
+
+    hot = jnp.zeros((rows, d), jnp.float32).at[
+        jnp.where(hot_mask, hot_slot, rows)
+    ].set(emb.astype(jnp.float32), mode="drop")
+    cold = jnp.zeros((rows, d), policy.cold_dtype).at[
+        jnp.where(~hot_mask, cold_slot, rows)
+    ].set(emb.astype(policy.cold_dtype), mode="drop")
+    return SplitPrecisionTable(hot, cold, loc)
+
+
+def split_lookup(table: SplitPrecisionTable, rows: jax.Array) -> jax.Array:
+    """Gather rows from the right pool; fp32 out. rows: (n,) int32, -1 pad."""
+    valid = rows >= 0
+    safe = jnp.where(valid, rows, 0)
+    loc = table.loc[safe]
+    is_hot = loc >= 0
+    hot_v = table.hot[jnp.where(is_hot, loc, 0)]
+    cold_v = table.cold[jnp.where(is_hot, 0, -loc - 1)].astype(jnp.float32)
+    out = jnp.where(is_hot[:, None], hot_v, cold_v)
+    return jnp.where(valid[:, None], out, 0.0)
+
+
+def split_update(
+    table: SplitPrecisionTable, rows: jax.Array, new_vals: jax.Array
+) -> SplitPrecisionTable:
+    """Scatter updated rows back into their pools (values cast per pool)."""
+    valid = rows >= 0
+    safe = jnp.where(valid, rows, 0)
+    loc = table.loc[safe]
+    is_hot = loc >= 0
+    H, C = table.hot.shape[0], table.cold.shape[0]
+    hot_idx = jnp.where(valid & is_hot, loc, H)
+    cold_idx = jnp.where(valid & ~is_hot, -loc - 1, C)
+    hot = table.hot.at[hot_idx].set(new_vals.astype(jnp.float32), mode="drop")
+    cold = table.cold.at[cold_idx].set(
+        new_vals.astype(table.cold.dtype), mode="drop"
+    )
+    return table._replace(hot=hot, cold=cold)
+
+
+def merge_split(table: SplitPrecisionTable) -> jax.Array:
+    """Back to one dense fp32 table (checkpointing / re-partitioning)."""
+    rows = jnp.arange(table.num_rows, dtype=jnp.int32)
+    return split_lookup(table, rows)
+
+
+def repartition(
+    table: SplitPrecisionTable, counters: jax.Array, policy: PrecisionPolicy
+) -> SplitPrecisionTable:
+    """Migrate rows between pools as hotness drifts (host cadence)."""
+    return build_split(merge_split(table), counters, policy)
+
+
+def quantization_error(emb: jax.Array, policy: PrecisionPolicy) -> jax.Array:
+    """Mean |x - cast(x)| — the accuracy-vs-memory tradeoff the policy manages."""
+    q = emb.astype(policy.cold_dtype).astype(jnp.float32)
+    return jnp.mean(jnp.abs(emb.astype(jnp.float32) - q))

@@ -1,0 +1,277 @@
+"""Model-parallel embedding lookup with two-stage ID dedup (paper §3 + §4.3).
+
+The embedding table is sharded row-wise over the `model` mesh axis (the
+paper's model parallelism for sparse models). One lookup performs the
+paper's two all-to-all exchanges:
+
+    local IDs --stage-1 dedup--> bucket by owner --all-to-all(IDs)-->
+    owner shard --stage-2 dedup--> local resolve (hash probe / row index)
+    --all-to-all(embeddings)--> requester --> restore original order.
+
+Both dedup stages are toggleable (`dedup_stage1`/`dedup_stage2`) to reproduce
+the four strategies of Fig. 16 (w/o unique, Comm. unique, Lookup unique,
+Two-stage unique).
+
+All shapes are static (pjit/shard_map requirement): stage-1 dedup emits a
+fixed `local_unique_cap` buffer and per-peer buckets hold `per_peer_cap`
+entries. Overflow falls back to the zero embedding and is *counted* in
+`LookupStats` — capacity planning is part of the lookup config, as buffer
+sizing is part of NCCL plugin configs in the original system.
+
+Everything here is written per-device (to be called inside `shard_map`);
+`make_sharded_lookup` builds the shard_map wrapper. The lookup is fully
+differentiable: its transpose re-uses the same all-to-alls in reverse and
+scatter-adds into the table shard, which is exactly the paper's backward
+update path for sparse embeddings (§3, 'Backward Update').
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import hashtable as ht
+from repro.core.dedup import PAD_ID, unique_static
+
+
+@dataclasses.dataclass(frozen=True)
+class LookupConfig:
+    num_shards: int  # size of the `model` axis
+    embed_dim: int
+    local_unique_cap: int  # stage-1 unique buffer (per device)
+    per_peer_cap: int  # bucket capacity per destination shard
+    dedup_stage1: bool = True
+    dedup_stage2: bool = True
+    axis: str = "model"
+    owner: str = "hash"  # 'hash' (dynamic tables) | 'block' (contiguous vocab rows)
+    vocab_size: int = 0  # required for owner='block'
+
+    @property
+    def recv_cap(self) -> int:
+        return self.num_shards * self.per_peer_cap
+
+    @property
+    def rows_per_shard(self) -> int:
+        assert self.owner == "block" and self.vocab_size % self.num_shards == 0
+        return self.vocab_size // self.num_shards
+
+
+class LookupStats(NamedTuple):
+    ids_sent: jax.Array  # real IDs entering the ID all-to-all (post stage-1)
+    ids_before_dedup: jax.Array  # real IDs before stage-1
+    lookups: jax.Array  # local resolves executed (post stage-2)
+    dropped: jax.Array  # bucket-capacity overflow (should be 0 when sized right)
+
+
+def owner_of(ids: jax.Array, cfg: LookupConfig) -> jax.Array:
+    """Destination shard per ID; num_shards for padding (dropped)."""
+    if cfg.owner == "hash":
+        own = (ht.murmur3_fmix64(ids) % jnp.uint64(cfg.num_shards)).astype(jnp.int32)
+    else:
+        own = jnp.clip(ids // cfg.rows_per_shard, 0, cfg.num_shards - 1).astype(jnp.int32)
+    return jnp.where(ids == PAD_ID, jnp.int32(cfg.num_shards), own)
+
+
+def bucket_by_owner(
+    ids: jax.Array, cfg: LookupConfig
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Pack IDs into a (num_shards, per_peer_cap) send buffer.
+
+    Returns (send_buf, slot_owner, slot_pos, dropped): (slot_owner[i],
+    slot_pos[i]) is where ids[i] landed (or (num_shards, 0) if dropped /
+    padding), enabling exact result retrieval after the return all-to-all.
+    """
+    n = ids.shape[0]
+    s, cap = cfg.num_shards, cfg.per_peer_cap
+    own = owner_of(ids, cfg)
+    order = jnp.argsort(own, stable=True)
+    sorted_ids, sorted_own = ids[order], own[order]
+    start = jnp.searchsorted(sorted_own, jnp.arange(s + 1, dtype=sorted_own.dtype))
+    pos = jnp.arange(n, dtype=jnp.int32) - start[jnp.clip(sorted_own, 0, s)].astype(jnp.int32)
+    ok = (sorted_own < s) & (pos < cap)
+    buf = jnp.full((s, cap), PAD_ID, jnp.int64)
+    buf = buf.at[
+        jnp.where(ok, sorted_own, s), jnp.where(ok, pos, 0)
+    ].set(jnp.where(ok, sorted_ids, PAD_ID), mode="drop")
+    inv = jnp.argsort(order)  # unsort permutation
+    slot_owner = jnp.where(ok, sorted_own, s)[inv]
+    slot_pos = jnp.where(ok, pos, 0)[inv]
+    dropped = jnp.sum((sorted_own < s) & ~ok).astype(jnp.int32)
+    return buf, slot_owner, slot_pos, dropped
+
+
+def lookup_device_fn(
+    resolve: Callable[[jax.Array], jax.Array],
+    ids_local: jax.Array,
+    cfg: LookupConfig,
+) -> Tuple[jax.Array, LookupStats]:
+    """Per-device body of the distributed lookup (call inside shard_map).
+
+    `resolve(ids) -> (len(ids), d)` resolves *owned* IDs on the local shard —
+    a dynamic-hash-table probe or a static row index. Returns embeddings in
+    the original `ids_local` order plus communication stats.
+    """
+    n = ids_local.shape[0]
+    before = jnp.sum(ids_local != PAD_ID).astype(jnp.int32)
+
+    # ---- Stage 1: dedup before the ID all-to-all (§4.3 first stage).
+    if cfg.dedup_stage1:
+        u = unique_static(ids_local, cfg.local_unique_cap)
+        work_ids, stage1_inv = u.ids, u.inverse
+    else:
+        assert cfg.local_unique_cap >= n, "without stage-1 dedup cap must cover raw ids"
+        work_ids = jnp.concatenate(
+            [ids_local, jnp.full((cfg.local_unique_cap - n,), PAD_ID, jnp.int64)]
+        )
+        stage1_inv = jnp.arange(n, dtype=jnp.int32)
+
+    # ---- Bucket + all-to-all the IDs.
+    send_ids, slot_owner, slot_pos, dropped = bucket_by_owner(work_ids, cfg)
+    recv_ids = jax.lax.all_to_all(
+        send_ids, cfg.axis, split_axis=0, concat_axis=0, tiled=True
+    )  # (num_shards, cap): recv_ids[j] = IDs peer j asked me to resolve
+
+    # ---- Stage 2: dedup after the exchange, then resolve locally.
+    flat = recv_ids.reshape(-1)
+    if cfg.dedup_stage2:
+        ru = unique_static(flat, cfg.recv_cap)
+        resolved = resolve(ru.ids)  # (recv_cap, d)
+        lookups = ru.count
+        send_back = jnp.take(resolved, ru.inverse, axis=0)
+    else:
+        resolved = resolve(flat)
+        lookups = jnp.sum(flat != PAD_ID).astype(jnp.int32)
+        send_back = resolved
+    send_back = send_back.reshape(cfg.num_shards, cfg.per_peer_cap, cfg.embed_dim)
+
+    # ---- Return all-to-all: embeddings travel back to the requesters.
+    recv_vec = jax.lax.all_to_all(
+        send_back, cfg.axis, split_axis=0, concat_axis=0, tiled=True
+    )  # recv_vec[j, p] = embedding for my send_ids[j, p]
+
+    # ---- Unpack to stage-1 unique order, then to original order.
+    in_buf = slot_owner < cfg.num_shards
+    uvecs = jnp.where(
+        in_buf[:, None],
+        recv_vec[jnp.where(in_buf, slot_owner, 0), slot_pos],
+        0.0,
+    )
+    vecs = jnp.take(uvecs, stage1_inv, axis=0)
+    vecs = jnp.where((ids_local != PAD_ID)[:, None], vecs, 0.0)
+
+    sent = jnp.sum(send_ids != PAD_ID).astype(jnp.int32)
+    return vecs, LookupStats(sent, before, lookups, dropped)
+
+
+# ---------------------------------------------------------------------------
+# Top-level wrappers.
+# ---------------------------------------------------------------------------
+
+
+def make_vocab_lookup(cfg: LookupConfig, mesh: Mesh, batch_spec: P):
+    """Distributed lookup over a contiguous row-sharded vocab table.
+
+    Returns fn(table, ids) -> (vecs, stats); table: (vocab, d) sharded
+    P('model', None); ids: (...,) int64 sharded by `batch_spec`. Differentiable
+    w.r.t. `table` (backward = reverse all-to-all + scatter-add on the shard).
+    """
+    assert cfg.owner == "block"
+
+    assert cfg.owner == "block"
+    axis_names = tuple(mesh.axis_names)
+
+    def device_fn(table_shard: jax.Array, ids: jax.Array):
+        shard_idx = jax.lax.axis_index(cfg.axis)
+        base = shard_idx.astype(jnp.int64) * cfg.rows_per_shard
+
+        def resolve(gids: jax.Array) -> jax.Array:
+            local = jnp.clip(gids - base, 0, cfg.rows_per_shard - 1).astype(jnp.int32)
+            out = jnp.take(table_shard, local, axis=0)
+            return jnp.where((gids != PAD_ID)[:, None], out, 0.0)
+
+        shape = ids.shape
+        vecs, stats = lookup_device_fn(resolve, ids.reshape(-1), cfg)
+        stats = jax.tree.map(lambda x: jax.lax.psum(x, axis_names), stats)
+        return vecs.reshape(shape + (cfg.embed_dim,)), stats
+
+    mapped = jax.shard_map(
+        device_fn,
+        mesh=mesh,
+        in_specs=(P(cfg.axis), batch_spec),
+        out_specs=(batch_spec, LookupStats(P(), P(), P(), P())),
+        check_vma=False,
+    )
+    return mapped
+
+
+def make_hash_lookup(cfg: LookupConfig, table_cfg: ht.HashTableConfig, mesh: Mesh, batch_spec: P):
+    """Distributed lookup over model-parallel *dynamic hash table* shards.
+
+    table state arrays carry a leading (num_shards,) axis sharded over
+    `model`; inside shard_map each device squeezes its own shard. IDs are
+    global (Eq. 8-encoded); ownership is hash-based for balance.
+    """
+    assert cfg.owner == "hash"
+    axis_names = tuple(mesh.axis_names)
+
+    def device_fn(state: ht.HashTableState, ids: jax.Array):
+        local = jax.tree.map(lambda x: x[0], state)  # squeeze shard axis
+
+        def resolve(gids: jax.Array) -> jax.Array:
+            rows = ht.find_rows(local, gids, table_cfg)
+            found = rows != ht.NO_ROW
+            out = jnp.take(local.emb, jnp.where(found, rows, 0), axis=0)
+            return jnp.where(found[:, None], out, 0.0)
+
+        shape = ids.shape
+        vecs, stats = lookup_device_fn(resolve, ids.reshape(-1), cfg)
+        stats = jax.tree.map(lambda x: jax.lax.psum(x, axis_names), stats)
+        return vecs.reshape(shape + (cfg.embed_dim,)), stats
+
+    state_specs = ht.HashTableState(
+        keys=P(cfg.axis), rows=P(cfg.axis), emb=P(cfg.axis),
+        counters=P(cfg.axis), timestamps=P(cfg.axis),
+        next_row=P(cfg.axis), size=P(cfg.axis),
+    )
+    mapped = jax.shard_map(
+        device_fn,
+        mesh=mesh,
+        in_specs=(state_specs, batch_spec),
+        out_specs=(batch_spec, LookupStats(P(), P(), P(), P())),
+        check_vma=False,
+    )
+    return mapped
+
+
+def align_table_shards(tables: list["ht.DynamicHashTable"]) -> ht.HashTableConfig:
+    """Grow every shard to a common (capacity, row_capacity) so states stack.
+
+    Model-parallel shards must share shapes (one pjit-visible array per field);
+    expansion decisions are therefore taken collectively — if any shard's load
+    factor trips, all shards double. Returns the common config.
+    """
+    cap = max(t.cfg.capacity for t in tables)
+    for t in tables:
+        while t.cfg.capacity < cap:
+            t.state, t.cfg = ht.expand_keys(t.state, t.cfg)
+    rows = max(t.state.row_capacity for t in tables)
+    for t in tables:
+        while t.state.row_capacity < rows:
+            t.state = ht.grow_chunk(t.state, t.cfg)
+    return tables[0].cfg
+
+
+def stack_table_shards(tables) -> ht.HashTableState:
+    """Stack per-shard states into the (num_shards, ...) layout used above.
+
+    Accepts DynamicHashTable wrappers (aligned first) or raw states.
+    """
+    if tables and isinstance(tables[0], ht.DynamicHashTable):
+        align_table_shards(tables)
+        states = [t.state for t in tables]
+    else:
+        states = list(tables)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)

@@ -1,0 +1,52 @@
+"""TorchRec-style *static* embedding table — the baseline the paper replaces.
+
+Fixed capacity decided up-front; IDs outside the range fall back to a shared
+default embedding row (the paper notes this degrades accuracy, §4.1). Used by
+`benchmarks/dynamic_table.py` and the GAUC-parity benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticTableConfig:
+    capacity: int  # preallocated rows (over-provisioned in practice)
+    embed_dim: int
+    dtype: jnp.dtype = jnp.float32
+    init_scale: float = 0.02
+
+
+class StaticTableState(NamedTuple):
+    emb: jax.Array  # (capacity + 1, d); last row = default embedding
+
+
+def create(cfg: StaticTableConfig, key: Optional[jax.Array] = None) -> StaticTableState:
+    shape = (cfg.capacity + 1, cfg.embed_dim)
+    if key is None:
+        emb = jnp.zeros(shape, cfg.dtype)
+    else:
+        emb = (jax.random.normal(key, shape, jnp.float32) * cfg.init_scale).astype(
+            cfg.dtype
+        )
+    return StaticTableState(emb=emb)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def lookup(state: StaticTableState, ids: jax.Array, cfg: StaticTableConfig) -> jax.Array:
+    """In-range IDs index directly; overflow/padding hits the default row."""
+    in_range = (ids >= 0) & (ids < cfg.capacity)
+    rows = jnp.where(in_range, ids, cfg.capacity).astype(jnp.int32)
+    return state.emb[rows]
+
+
+def overflow_fraction(ids: jax.Array, cfg: StaticTableConfig) -> jax.Array:
+    """How often the default embedding fires — the accuracy-degradation proxy."""
+    valid = ids >= 0
+    over = valid & (ids >= cfg.capacity)
+    return jnp.sum(over) / jnp.maximum(jnp.sum(valid), 1)

@@ -1,0 +1,178 @@
+"""Automatic embedding-table merging (paper §4.2).
+
+`FeatureConfig` is the paper's unified feature-configuration interface: one
+declarative record per feature (name, embedding dim, pooling, table sharing).
+`plan_merges` generates the merging strategy automatically (features with
+identical embedding dimension + dtype fuse into one merged dynamic table),
+and `encode_ids` implements the bitwise global-ID scheme of Eq. 8:
+
+    k  = ceil(log2(m + 1))            # identifier bits for m tables
+    ID = (i << (63 - k)) | x          # top bit kept 0 => offsets stay positive
+
+`HashTableCollection` owns the merged dynamic hash tables and performs
+lookups + pooling, so model code only ever names features.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashtable as ht
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureConfig:
+    """Unified feature configuration interface (paper's `FeatureConfig`)."""
+
+    name: str
+    embed_dim: int
+    pooling: str = "none"  # 'none' | 'sum' | 'mean' (sequence features vs id lists)
+    dtype: str = "float32"
+    shared_table: Optional[str] = None  # features sharing one logical table
+
+
+@dataclasses.dataclass(frozen=True)
+class MergedTableSpec:
+    name: str
+    embed_dim: int
+    dtype: str
+    members: Tuple[str, ...]  # feature names, order == table index within merge
+    id_bits: int  # k of Eq. 8 (identifier bits, group-wide)
+
+
+def plan_merges(features: Sequence[FeatureConfig]) -> List[MergedTableSpec]:
+    """Merging strategy: group by (embed_dim, dtype); shared tables collapse.
+
+    This replaces TorchRec's labor-intensive manual per-table configuration —
+    developers only declare features (§4.2 'Automated Merging Table').
+    """
+    groups: Dict[Tuple[int, str], List[str]] = {}
+    seen_logical: Dict[str, Tuple[int, str]] = {}
+    for f in features:
+        logical = f.shared_table or f.name
+        key = (f.embed_dim, f.dtype)
+        if logical in seen_logical:
+            if seen_logical[logical] != key:
+                raise ValueError(
+                    f"feature {f.name!r} shares table {logical!r} with mismatched dim/dtype"
+                )
+            continue
+        seen_logical[logical] = key
+        groups.setdefault(key, []).append(logical)
+
+    out = []
+    for (dim, dtype), members in sorted(groups.items(), key=lambda kv: kv[0][0]):
+        m = len(members)
+        k = max(1, math.ceil(math.log2(m + 1)))
+        out.append(
+            MergedTableSpec(
+                name=f"merged_d{dim}_{dtype}",
+                embed_dim=dim,
+                dtype=dtype,
+                members=tuple(members),
+                id_bits=k,
+            )
+        )
+    return out
+
+
+def encode_ids(table_index: int, ids: jax.Array, id_bits: int) -> jax.Array:
+    """Eq. 8: globally unique ID = (i << (63 - k)) | x.
+
+    The top bit stays 0 (offsets positive); the low (63 - k) bits carry the
+    raw feature ID; PAD_ID (-1) passes through untouched so padding survives.
+    """
+    if table_index >= (1 << id_bits):
+        raise ValueError(f"table index {table_index} needs more than {id_bits} bits")
+    shift = 63 - id_bits
+    mask = (1 << shift) - 1
+    encoded = (jnp.int64(table_index) << shift) | (ids.astype(jnp.int64) & mask)
+    return jnp.where(ids == jnp.int64(-1), jnp.int64(-1), encoded)
+
+
+def decode_ids(ids: jax.Array, id_bits: int) -> Tuple[jax.Array, jax.Array]:
+    """Inverse of Eq. 8 (used by checkpoint inspection / tests)."""
+    shift = 63 - id_bits
+    mask = (jnp.int64(1) << shift) - jnp.int64(1)
+    table_index = jnp.where(ids == -1, -1, ids >> shift)
+    raw = jnp.where(ids == -1, -1, ids & mask)
+    return table_index, raw
+
+
+class HashTableCollection:
+    """The paper's `HashTableCollection`: merged dynamic tables + pooling.
+
+    Lookup path per merged table: encode member IDs into the global space
+    (Eq. 8) -> one fused lookup on one dynamic table -> split + pool per
+    feature. Multiple per-feature lookup *operators* fuse into one (§4.2).
+    """
+
+    def __init__(
+        self,
+        features: Sequence[FeatureConfig],
+        key: jax.Array,
+        capacity: int = 1 << 16,
+        chunk_rows: int = 4096,
+    ):
+        self.features = {f.name: f for f in features}
+        self.specs = plan_merges(features)
+        self._logical_of = {
+            f.name: (f.shared_table or f.name) for f in features
+        }
+        self.tables: Dict[str, ht.DynamicHashTable] = {}
+        self._member_index: Dict[str, Tuple[str, int, int]] = {}
+        keys = jax.random.split(key, max(1, len(self.specs)))
+        for spec, k in zip(self.specs, keys):
+            cfg = ht.HashTableConfig(
+                capacity=capacity,
+                embed_dim=spec.embed_dim,
+                chunk_rows=chunk_rows,
+                dtype=jnp.dtype(spec.dtype),
+            )
+            self.tables[spec.name] = ht.DynamicHashTable(cfg, k)
+            for i, member in enumerate(spec.members):
+                self._member_index[member] = (spec.name, i, spec.id_bits)
+
+    def global_ids(self, feature: str, ids: jax.Array) -> Tuple[str, jax.Array]:
+        table, idx, bits = self._member_index[self._logical_of[feature]]
+        return table, encode_ids(idx, ids, bits)
+
+    def lookup(self, batch: Dict[str, jax.Array], step: int = 0) -> Dict[str, jax.Array]:
+        """batch: feature name -> int64 ID array (any shape; -1 = padding).
+
+        Unknown IDs are inserted on the fly (dynamic table, §4.1) and returned
+        with their freshly initialized embeddings.
+        """
+        # Bucket features per merged table => ONE fused lookup per table.
+        per_table: Dict[str, List[Tuple[str, jax.Array]]] = {}
+        for name, ids in batch.items():
+            table, gids = self.global_ids(name, ids)
+            per_table.setdefault(table, []).append((name, gids))
+
+        out: Dict[str, jax.Array] = {}
+        for table, items in per_table.items():
+            tbl = self.tables[table]
+            flat = jnp.concatenate([g.reshape(-1) for _, g in items])
+            tbl.insert(flat)
+            vecs = tbl.lookup(flat, step)
+            ofs = 0
+            for name, gids in items:
+                n = gids.size
+                v = vecs[ofs : ofs + n].reshape(gids.shape + (vecs.shape[-1],))
+                ofs += n
+                pool = self.features[name].pooling
+                if pool == "sum":
+                    v = jnp.sum(jnp.where((gids == -1)[..., None], 0, v), axis=-2)
+                elif pool == "mean":
+                    valid = jnp.sum(gids != -1, axis=-1, keepdims=True)
+                    v = jnp.sum(jnp.where((gids == -1)[..., None], 0, v), axis=-2)
+                    v = v / jnp.maximum(valid, 1)
+                out[name] = v
+        return out
+
+    def table_of(self, feature: str) -> ht.DynamicHashTable:
+        return self.tables[self._member_index[self._logical_of[feature]][0]]

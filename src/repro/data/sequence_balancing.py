@@ -1,0 +1,169 @@
+"""Dynamic sequence balancing (paper §5.1, Algorithm 1).
+
+User sequences are long-tailed; fixed-size batches leave GPUs idle for up to
+25.8 ms/step because the slowest device holds the longest sequences. The
+paper's fix: each device fills a buffer Q of sequences and cuts a batch at
+the point where the *cumulative token count* is closest to a target N
+(avg_len × batch_size), found by binary search over the cumulative sums.
+Batch *size* becomes dynamic; token count per device becomes ~constant.
+
+`DynamicSequenceBatcher` is Algorithm 1 verbatim (host-side — batching is
+data-plane work that runs on CPU ahead of the device step, overlapped by the
+pipeline's prefetch). `FixedSizeBatcher` is the baseline ("sequence
+balancing disabled") used by benchmarks Fig. 14/15 and Table 2.
+
+The companion device-side piece — batch-size-weighted gradient averaging so
+varying per-device batch sizes don't bias the update — lives in
+`repro/train/weighted_sync.py`.
+"""
+from __future__ import annotations
+
+import bisect
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+Sample = Dict[str, np.ndarray]
+
+
+def token_count(sample: Sample) -> int:
+    return int(sample["length"])
+
+
+class DynamicSequenceBatcher:
+    """Algorithm 1: token-budget batching via cumulative-sum binary search.
+
+    Input chunks C_i arrive via `feed` (hive-table chunks in the paper; shard
+    file contents here); `batches()` yields lists of samples whose total token
+    count is as close as possible to `target_tokens` (N)."""
+
+    def __init__(self, target_tokens: int, max_batch: Optional[int] = None):
+        self.target = int(target_tokens)
+        self.max_batch = max_batch  # optional safety cap (device memory)
+        self.queue: List[Sample] = []  # Q
+        self._tokens = 0  # sum(Q)
+
+    def feed(self, chunk: Iterable[Sample]) -> None:
+        """Q <- add all sequences in C_i."""
+        for s in chunk:
+            self.queue.append(s)
+            self._tokens += token_count(s)
+
+    @property
+    def buffered_tokens(self) -> int:
+        return self._tokens
+
+    def _cut(self) -> Optional[List[Sample]]:
+        """One Algorithm-1 iteration: binary-search the cumsum list for the
+        value closest to N; pop Q[:k]."""
+        if self._tokens < self.target:
+            return None  # need more chunks (remaining samples merge forward)
+        cumsum = np.cumsum([token_count(s) for s in self.queue])
+        # k = index whose cumulative sum is *closest* to N (Algorithm 1).
+        j = bisect.bisect_left(cumsum.tolist(), self.target)
+        if j == 0:
+            k = 1
+        elif j >= len(cumsum):
+            k = len(cumsum)
+        else:
+            below, above = cumsum[j - 1], cumsum[j]
+            k = j if (self.target - below) <= (above - self.target) else j + 1
+        if self.max_batch is not None:
+            k = min(k, self.max_batch)
+        batch, self.queue = self.queue[:k], self.queue[k:]
+        self._tokens -= int(sum(token_count(s) for s in batch))
+        return batch
+
+    def batches(self, chunks: Iterable[Iterable[Sample]]) -> Iterator[List[Sample]]:
+        """Drive Algorithm 1 over a chunk stream until all chunks are consumed."""
+        it = iter(chunks)
+        exhausted = False
+        while True:
+            while self._tokens < self.target and not exhausted:
+                try:
+                    self.feed(next(it))
+                except StopIteration:
+                    exhausted = True
+            b = self._cut()
+            if b is not None:
+                yield b
+                continue
+            if exhausted:
+                while self.queue:  # final partial batches (max_batch still holds)
+                    k = len(self.queue) if self.max_batch is None else min(
+                        self.max_batch, len(self.queue)
+                    )
+                    batch, self.queue = self.queue[:k], self.queue[k:]
+                    self._tokens -= int(sum(token_count(s) for s in batch))
+                    yield batch
+                self._tokens = 0
+                return
+
+
+class FixedSizeBatcher:
+    """Baseline: fixed `batch_size` sequences per batch (balancing disabled)."""
+
+    def __init__(self, batch_size: int):
+        self.batch_size = batch_size
+
+    def batches(self, chunks: Iterable[Iterable[Sample]]) -> Iterator[List[Sample]]:
+        buf: List[Sample] = []
+        for chunk in chunks:
+            for s in chunk:
+                buf.append(s)
+                if len(buf) == self.batch_size:
+                    yield buf
+                    buf = []
+        if buf:
+            yield buf
+
+
+# ---------------------------------------------------------------------------
+# Batch materialization: samples -> padded arrays for the device step.
+# ---------------------------------------------------------------------------
+
+
+def pad_batch(
+    samples: Sequence[Sample], pad_to_tokens: int, bucket: int = 128
+) -> Dict[str, np.ndarray]:
+    """Pack a balanced batch into fixed-shape arrays.
+
+    Rows = sequences, padded to the longest (rounded up to `bucket` to bound
+    jit recompiles); over-target batches are truncated row-wise *never*
+    token-wise (the paper forbids sequence truncation — whole sequences only).
+    Emits: item_ids (B, S) int64 (-1 pad), labels (B, S, 2) int8, mask (B, S),
+    tokens () — the true token count for weighted gradient sync.
+    """
+    B = len(samples)
+    longest = max(int(s["length"]) for s in samples)
+    S = -(-longest // bucket) * bucket
+    item_ids = np.full((B, S), -1, np.int64)
+    labels = np.zeros((B, S, 2), np.int8)
+    mask = np.zeros((B, S), bool)
+    for i, s in enumerate(samples):
+        L = int(s["length"])
+        item_ids[i, :L] = s["item_ids"]
+        labels[i, :L] = s["labels"]
+        mask[i, :L] = True
+    tokens = np.int32(sum(int(s["length"]) for s in samples))
+    user_ids = np.stack([s["user_ids"] for s in samples])
+    return {
+        "item_ids": item_ids,
+        "labels": labels,
+        "mask": mask,
+        "user_ids": user_ids,
+        "tokens": tokens,
+        "batch_size": np.int32(B),
+    }
+
+
+def imbalance_stats(per_device_tokens: Sequence[int]) -> Dict[str, float]:
+    """Fig. 15 metric: spread of per-device token counts in one step."""
+    t = np.asarray(per_device_tokens, np.float64)
+    return {
+        "min": float(t.min()),
+        "max": float(t.max()),
+        "mean": float(t.mean()),
+        "spread": float(t.max() - t.min()),
+        "rel_imbalance": float((t.max() - t.min()) / max(t.mean(), 1.0)),
+    }

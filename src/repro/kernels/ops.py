@@ -1,0 +1,73 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+Each op picks between the Pallas kernel (TPU target; interpret=True on CPU
+when forced) and the pure-jnp reference (ref.py), keyed by backend or the
+``impl`` argument:
+
+    impl='auto'      TPU -> pallas, otherwise -> ref (fast XLA path on CPU)
+    impl='pallas'    always the kernel (compiled on TPU)
+    impl='interpret' the kernel body executed in Python (correctness sweeps)
+    impl='ref'       the jnp oracle
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+
+
+def _resolve(impl: str) -> str:
+    impl = impl or os.environ.get("REPRO_KERNEL_IMPL", "auto")
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def hstu_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, u: jax.Array,
+    q_pos: jax.Array, k_pos: jax.Array,
+    *, chunk: int = 1024, impl: str = "auto",
+) -> jax.Array:
+    """Normalized causal SiLU attention with fused ⊙U epilogue (HSTU §5.2).
+
+    The Pallas path assumes arange positions (training/prefill layout); the
+    ref paths honor arbitrary q_pos/k_pos.
+    """
+    mode = _resolve(impl)
+    if mode in ("pallas", "interpret"):
+        from repro.kernels.hstu_attention import hstu_attention_fused
+
+        return hstu_attention_fused(q, k, v, u, interpret=(mode == "interpret"))
+    if q.shape[1] > 2 * chunk:
+        return R.hstu_attention_chunked(q, k, v, u, q_pos, k_pos, chunk)
+    return R.hstu_attention_ref(q, k, v, u, q_pos, k_pos)
+
+
+def seg_sum(
+    grads: jax.Array, seg_ids: jax.Array, num_segments: int, *, impl: str = "auto"
+) -> jax.Array:
+    """Sorted-segment sum (sparse grad accumulation)."""
+    mode = _resolve(impl)
+    if mode in ("pallas", "interpret"):
+        from repro.kernels.seg_sum import seg_sum as seg_sum_pallas
+
+        return seg_sum_pallas(grads, seg_ids, num_segments,
+                              interpret=(mode == "interpret"))
+    return R.seg_sum_ref(grads, seg_ids, num_segments)
+
+
+def window_decode_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    k_pos: jax.Array, q_pos: jax.Array, window: int, *, impl: str = "auto"
+) -> jax.Array:
+    """One-token sliding-window softmax attention over a ring-buffer cache."""
+    mode = _resolve(impl)
+    if mode in ("pallas", "interpret"):
+        from repro.kernels.window_attention import window_decode_attention as wk
+
+        return wk(q, k, v, k_pos, q_pos, window, interpret=(mode == "interpret"))
+    return R.window_decode_ref(q, k, v, k_pos, q_pos, window)

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel sweeps in tests/test_kernels.py
+assert against (interpret=True on CPU), and the fallback implementation the
+ops.py dispatchers use on non-TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# HSTU fused SiLU attention (paper §5.2 operator fusion)
+# ---------------------------------------------------------------------------
+
+
+def hstu_attention_ref(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, H, hd)
+    v: jax.Array,  # (B, Sk, H, hd)
+    u: jax.Array,  # (B, Sq, H, hd) — the ⊙U epilogue operand
+    q_pos: jax.Array,  # (B, Sq) int32
+    k_pos: jax.Array,  # (B, Sk) int32
+) -> jax.Array:
+    """O[t] = u_t ⊙ (1/count_t) Σ_{s: k_pos[s] <= q_pos[t]} silu(q_t·k_s) v_s."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    mask = (k_pos[:, None, :] <= q_pos[:, :, None])[:, None]  # (B,1,Sq,Sk)
+    w = jnp.where(mask, jax.nn.silu(s), 0.0)
+    count = jnp.maximum(jnp.sum(mask, axis=-1), 1).astype(jnp.float32)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w / count[..., None], v.astype(jnp.float32))
+    return (out * u.astype(jnp.float32)).astype(q.dtype)
+
+
+def hstu_attention_chunked(
+    q: jax.Array, k: jax.Array, v: jax.Array, u: jax.Array,
+    q_pos: jax.Array, k_pos: jax.Array, chunk: int,
+) -> jax.Array:
+    """Streaming form of hstu_attention_ref (memory O(Sq * chunk)); SiLU
+    attention is linear in V, so accumulation needs no online-max."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)),
+                        constant_values=jnp.iinfo(jnp.int32).max)
+    kc = k.reshape(B, n_chunks, chunk, H, hd).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, chunk, H, hd).swapaxes(0, 1)
+    pc = k_pos.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    def step(carry, blk):
+        acc, cnt = carry
+        kb, vb, pb = blk
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb, preferred_element_type=jnp.float32)
+        mask = (pb[:, None, :] <= q_pos[:, :, None])[:, None]
+        w = jnp.where(mask, jax.nn.silu(s), 0.0)
+        acc = acc + jnp.einsum("bhqk,bkhd->bqhd", w, vb.astype(jnp.float32))
+        cnt = cnt + jnp.sum(mask[:, 0], axis=-1).astype(cnt.dtype)
+        return (acc, cnt), None
+
+    acc0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    cnt0 = jnp.zeros((B, Sq), jnp.int32)
+    (acc, cnt), _ = jax.lax.scan(step, (acc0, cnt0), (kc, vc, pc))
+    out = acc / jnp.maximum(cnt, 1).astype(jnp.float32)[..., None, None]
+    return (out * u.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sorted segment sum (sparse gradient accumulation, paper §5.2)
+# ---------------------------------------------------------------------------
+
+
+def seg_sum_ref(grads: jax.Array, seg_ids: jax.Array, num_segments: int) -> jax.Array:
+    """grads: (N, d); seg_ids: (N,) int32 sorted ascending; ids outside
+    [0, num_segments) are dropped (padding). Returns (num_segments, d) fp32."""
+    out = jnp.zeros((num_segments, grads.shape[1]), jnp.float32)
+    return out.at[seg_ids].add(grads.astype(jnp.float32), mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window decode attention (long_500k dense decode)
+# ---------------------------------------------------------------------------
+
+
+def window_decode_ref(
+    q: jax.Array,  # (N, G, hd) — N = B * num_kv_heads, G = query heads per kv
+    k: jax.Array,  # (N, W, hd) ring-buffer window cache
+    v: jax.Array,  # (N, W, hd)
+    k_pos: jax.Array,  # (N, W) int32 global position held by each slot
+    q_pos: jax.Array,  # (N,) int32 current decode position
+    window: int,
+) -> jax.Array:
+    s = jnp.einsum("ngd,nwd->ngw", q, k, preferred_element_type=jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)
+    ok = (k_pos <= q_pos[:, None]) & (q_pos[:, None] - k_pos < window)
+    s = jnp.where(ok[:, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("ngw,nwd->ngd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,95 @@
+"""Sorted-segment-sum Pallas kernel (sparse gradient accumulation, §5.2).
+
+The paper accumulates gradients of identical embedding IDs across batches
+before applying one collective update. After sorting (id, grad) pairs by id,
+accumulation is a segment sum. TPU adaptation: scatter-add has no efficient
+TPU primitive, but over *sorted* ids the one-hot dispatch matrix
+
+    out[u, :] = Σ_n [seg_ids[n] == u] · grads[n, :]
+
+is block-banded — each (row-tile, input-tile) pair overlaps only near the
+diagonal band. The kernel materializes the (block_u, block_n) 0/1 mask in
+VMEM and feeds it to the MXU as a matmul, and *skips* band-misses with a
+dynamic `pl.when` on the tile's [min, max] segment range (cheap: ids are
+sorted, so the range check is two scalar reads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(seg_ref, g_ref, o_ref, acc_ref, *, block_u, block_n):
+    ui, di, ni = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    nn = pl.num_programs(2)
+
+    @pl.when(ni == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seg = seg_ref[...]  # (block_n,) int32, sorted (padding = large sentinel)
+    u0 = ui * block_u
+    # Dynamic band check: sorted ids ⇒ tile range is [seg[0], seg[-1]].
+    @pl.when((seg[0] < u0 + block_u) & (seg[block_n - 1] >= u0))
+    def _compute():
+        rows = u0 + jax.lax.broadcasted_iota(jnp.int32, (block_u, block_n), 0)
+        onehot = (rows == seg[None, :]).astype(jnp.float32)
+        g = g_ref[...].astype(jnp.float32)  # (block_n, block_d)
+        acc_ref[...] += jax.lax.dot_general(
+            onehot, g, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ni == nn - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...]
+
+
+def seg_sum(
+    grads: jax.Array,  # (N, d)
+    seg_ids: jax.Array,  # (N,) int32 sorted ascending; >= num_segments dropped
+    num_segments: int,
+    *,
+    block_u: int = 256,
+    block_n: int = 256,
+    block_d: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    N, d = grads.shape
+    block_n = min(block_n, max(8, N))
+    block_u = min(block_u, max(8, num_segments))
+    block_d = min(block_d, max(1, d))
+    pad_n = (-N) % block_n
+    pad_u = (-num_segments) % block_u
+    pad_d = (-d) % block_d
+    if pad_n:
+        grads = jnp.pad(grads, ((0, pad_n), (0, 0)))
+        seg_ids = jnp.pad(seg_ids, (0, pad_n), constant_values=jnp.iinfo(jnp.int32).max)
+    if pad_d:
+        grads = jnp.pad(grads, ((0, 0), (0, pad_d)))
+    Np, Up, dp = N + pad_n, num_segments + pad_u, d + pad_d
+    # out-of-range ids (padding) never match a row in [0, Up): clamp sentinel
+    seg_ids = jnp.where(seg_ids >= num_segments, jnp.int32(2**30), seg_ids.astype(jnp.int32))
+
+    grid = (Up // block_u, dp // block_d, Np // block_n)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_u=block_u, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda ui, di, ni: (ni,)),
+            pl.BlockSpec((block_n, block_d), lambda ui, di, ni: (ni, di)),
+        ],
+        out_specs=pl.BlockSpec((block_u, block_d), lambda ui, di, ni: (ui, di)),
+        out_shape=jax.ShapeDtypeStruct((Up, dp), jnp.float32),
+        scratch_shapes=[_vmem((block_u, block_d))],
+        interpret=interpret,
+    )(seg_ids, grads)
+    return out[:num_segments, :d]
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

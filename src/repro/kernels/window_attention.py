@@ -1,0 +1,112 @@
+"""Sliding-window softmax decode-attention Pallas kernel.
+
+Covers long_500k decode for the pure full-attention dense architectures:
+one query token attends to a ring-buffer KV cache of `window` slots. The
+kernel streams (block_w, hd) K/V pages through VMEM with the classic
+online-softmax (m, l, acc) carried in scratch; ring-buffer validity (slot
+position ≤ current position AND within the window) is masked per tile from
+the slot-position array. Decode is HBM-bandwidth bound — the win is reading
+K and V exactly once with no materialized (G, W) score tensor round-trip.
+
+Layout: GQA rows are flattened to N = B * num_kv_heads independent problems
+of G = H / num_kv_heads query heads each.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, window, scale):
+    wi = pl.program_id(1)
+    nw = pl.num_programs(1)
+
+    @pl.when(wi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (G, hd)
+    k = k_ref[0].astype(jnp.float32)  # (block_w, hd)
+    v = v_ref[0].astype(jnp.float32)
+    kpos = kpos_ref[0]  # (block_w,)
+    qpos = qpos_ref[0, 0]  # scalar
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, block_w)
+    ok = (kpos <= qpos) & (qpos - kpos < window)
+    s = jnp.where(ok[None, :], s, -jnp.inf)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(ok[None, :], jnp.exp(s - m_safe), 0.0)
+    coef = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_new = l_prev * coef + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * coef + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...], l_ref[...] = m_new, l_new
+
+    @pl.when(wi == nw - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def window_decode_attention(
+    q: jax.Array,  # (N, G, hd)
+    k: jax.Array,  # (N, W, hd)
+    v: jax.Array,  # (N, W, hd)
+    k_pos: jax.Array,  # (N, W) int32
+    q_pos: jax.Array,  # (N,) int32
+    window: int,
+    *,
+    block_w: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    N, G, hd = q.shape
+    W = k.shape[1]
+    block_w = min(block_w, max(8, W))
+    pad_w = (-W) % block_w
+    pad_g = (-G) % 8 if not interpret else 0
+    pad_d = (-hd) % 128 if not interpret else 0
+    if pad_w:
+        k = jnp.pad(k, ((0, 0), (0, pad_w), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_w), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad_w)),
+                        constant_values=jnp.iinfo(jnp.int32).max)
+    if pad_g or pad_d:
+        q = jnp.pad(q, ((0, 0), (0, pad_g), (0, pad_d)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_d)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_d)))
+    Gp, hdp, Wp = G + pad_g, hd + pad_d, W + pad_w
+    qpos2 = q_pos.astype(jnp.int32).reshape(N, 1)
+
+    grid = (N, Wp // block_w)
+    out = pl.pallas_call(
+        functools.partial(_kernel, window=window, scale=hd**-0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Gp, hdp), lambda n, wi: (n, 0, 0)),
+            pl.BlockSpec((1, block_w, hdp), lambda n, wi: (n, wi, 0)),
+            pl.BlockSpec((1, block_w, hdp), lambda n, wi: (n, wi, 0)),
+            pl.BlockSpec((1, block_w), lambda n, wi: (n, wi)),
+            pl.BlockSpec((1, 1), lambda n, wi: (n, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Gp, hdp), lambda n, wi: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, Gp, hdp), q.dtype),
+        scratch_shapes=[_vmem((Gp, 1)), _vmem((Gp, 1)), _vmem((Gp, hdp))],
+        interpret=interpret,
+    )(q, k, v, k_pos, qpos2)
+    return out[:, :G, :hd]
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,364 @@
+"""Analytic roofline cost model per (arch × input-shape × parallel plan).
+
+Why analytic: XLA's `compiled.cost_analysis()` counts each while-loop *body
+once* regardless of trip count (verified on this container, see
+EXPERIMENTS.md §Dry-run caveat), so scanned-layer stacks, chunked-attention
+scans and gradient-accumulation loops are undercounted by orders of
+magnitude. The dry-run still records the HLO numbers (they are exact for the
+loop-free decode steps and useful as cross-checks); this module supplies the
+trip-count-exact FLOPs / HBM bytes / ICI link-bytes that the §Roofline table
+and the §Perf hillclimb use.
+
+All formulas are per *step* (train: fwd + bwd + optimizer; prefill: one fwd;
+decode: one token). FLOPs are global; HBM and ICI bytes are per device.
+Matmul FLOPs use 2·m·n·k; backward = 2× forward; full remat adds one extra
+forward (cfg.remat).
+
+Collective volumes use ring-algorithm link traffic per device:
+  all-gather / reduce-scatter of global size F over a d-way axis: F·(d-1)/d
+  all-reduce: 2·F·(d-1)/d
+  all-to-all of per-device buffer F: F·(d-1)/d
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.common.params import param_count
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.models.transformer import lm_param_defs
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    chips: int = 256
+    data: int = 16  # data-axis size (×pod for multi-pod batch sharding)
+    model: int = 16
+    fsdp: bool = True  # ZeRO-3 params+opt over data
+    dense_tp: bool = True  # heads/mlp/expert sharding over model
+    accum_steps: int = 1
+    param_dtype_bytes: int = 2  # bf16
+    # §Perf variants
+    dp_dense: bool = False  # batch over data×model, full FSDP, no TP
+    chunked_ce: bool = False  # streaming head+CE: no materialized logits
+    # multi-pod: batch additionally shards over `pod`; cross-pod reduction
+    # rides DCI (slower than ICI)
+    pods: int = 1
+    dci_bw: float = 25e9  # bytes/s per chip across the pod boundary
+
+    @property
+    def data_ways(self) -> int:
+        """Batch-sharding ways (× pods: batch shards over the pod axis)."""
+        return self.pods * self.data * (self.model if self.dp_dense else 1)
+
+    @property
+    def tp_ways(self) -> int:
+        return 1 if self.dp_dense else (self.model if self.dense_tp else 1)
+
+
+@dataclasses.dataclass
+class CostBreakdown:
+    flops_global: float
+    hbm_bytes_dev: float
+    ici_bytes_dev: float
+    model_flops: float  # 6·N_active·D
+    n_params: int
+    n_active: int
+    detail: Dict[str, float]
+
+    def terms(self, plan: ParallelPlan) -> Dict[str, float]:
+        compute_s = self.flops_global / (plan.chips * PEAK_FLOPS)
+        memory_s = self.hbm_bytes_dev / HBM_BW
+        collective_s = self.ici_bytes_dev / ICI_BW
+        dom = max(
+            ("compute", compute_s), ("memory", memory_s),
+            ("collective", collective_s), key=lambda kv: kv[1],
+        )[0]
+        return {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": dom,
+            "useful_ratio": (self.model_flops / self.flops_global
+                             if self.flops_global else 0.0),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Per-block forward FLOPs per token (global, unsharded counts)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_flops_tok(cfg: ModelConfig, s_ctx: float, window: int) -> float:
+    d, H, K, hd, f = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd, cfg.d_ff
+    ctx = min(s_ctx, window) if window > 0 else s_ctx
+    proj = 2 * d * (H + 2 * K) * hd + 2 * H * hd * d
+    attn = 2 * ctx * H * hd * 2  # QK^T + PV
+    mlp = 6 * d * f  # gated: wi, wg, wo
+    return proj + attn + mlp
+
+
+def _moe_block_flops_tok(cfg: ModelConfig, s_ctx: float, window: int) -> float:
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    f = cfg.moe_d_ff or cfg.d_ff
+    ctx = min(s_ctx, window) if window > 0 else s_ctx
+    proj = 2 * d * (H + 2 * K) * hd + 2 * H * hd * d
+    attn = 2 * ctx * H * hd * 2
+    router = 2 * d * cfg.num_experts
+    experts = cfg.experts_per_token * 6 * d * f
+    shared = 6 * d * f if cfg.shared_expert else 0
+    return proj + attn + router + experts + shared
+
+
+def _mlstm_block_flops_tok(cfg: ModelConfig, chunk: int) -> float:
+    d = cfg.d_model
+    inner = cfg.rnn_width or 2 * d
+    H = cfg.num_heads
+    hd = inner // H
+    up = 2 * d * 2 * inner
+    qkv = 3 * 2 * inner * hd  # block-diagonal per-head projections
+    gates = 2 * inner * 2 * H
+    intra = 2 * chunk * H * hd * 2  # masked quadratic within the chunk
+    state = 2 * 2 * H * hd * hd  # C update + C query
+    down = 2 * inner * d
+    return up + qkv + gates + intra + state + down
+
+
+def _slstm_block_flops_tok(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    f = cfg.d_ff or int(4 * d / 3 // 128 + 1) * 128
+    gates_in = 4 * 2 * d * d
+    gates_rec = 4 * 2 * H * hd * hd
+    mlp = 6 * d * f
+    return gates_in + gates_rec + mlp
+
+
+def _rglru_block_flops_tok(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    W = cfg.rnn_width or d
+    branches = 2 * 2 * d * W
+    gates = 2 * 2 * W * W
+    scan = 12 * W  # elementwise recurrence (assoc-scan work ~2x sequential)
+    out = 2 * W * d
+    mlp = 6 * d * cfg.d_ff
+    return branches + gates + scan + out + mlp
+
+
+def _hstu_block_flops_tok(cfg: ModelConfig, s_ctx: float) -> float:
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.hd
+    proj = 2 * d * 4 * H * hd
+    attn = 2 * s_ctx * H * hd * 2  # silu(QK^T) V
+    out = 2 * H * hd * d
+    return proj + attn + out
+
+
+def _block_flops_tok(cfg: ModelConfig, kind: str, s_ctx: float, mode: str) -> float:
+    if kind == "attn":
+        return _attn_block_flops_tok(cfg, s_ctx, 0)
+    if kind == "local":
+        return _attn_block_flops_tok(cfg, s_ctx, cfg.window_size)
+    if kind == "moe":
+        return _moe_block_flops_tok(cfg, s_ctx, 0)
+    if kind == "mlstm":
+        return _mlstm_block_flops_tok(cfg, 1 if mode == "decode" else 256)
+    if kind == "slstm":
+        return _slstm_block_flops_tok(cfg)
+    if kind == "rglru":
+        return _rglru_block_flops_tok(cfg)
+    if kind == "hstu":
+        return _hstu_block_flops_tok(cfg, s_ctx)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Parameter counts
+# ---------------------------------------------------------------------------
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return param_count(lm_param_defs(cfg))
+
+
+def n_active_params(cfg: ModelConfig) -> int:
+    """Active per token: total minus the (E - k) unrouted expert MLPs."""
+    total = n_params(cfg)
+    if not cfg.num_experts:
+        return total
+    f = cfg.moe_d_ff or cfg.d_ff
+    per_expert = 3 * cfg.d_model * f
+    n_moe_layers = sum(1 for k in cfg.pattern if k == "moe")
+    inactive = (cfg.num_experts - cfg.experts_per_token) * per_expert * n_moe_layers
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Step-level model
+# ---------------------------------------------------------------------------
+
+
+def step_cost(cfg: ModelConfig, shape: InputShape, plan: ParallelPlan) -> CostBreakdown:
+    B, S = shape.global_batch, shape.seq_len
+    mode = shape.kind
+    tokens = B * (1 if mode == "decode" else S)
+    # average causal context per token
+    s_ctx = S if mode == "decode" else S / 2.0
+
+    # ---- FLOPs (global) ------------------------------------------------
+    fwd_stack = tokens * sum(_block_flops_tok(cfg, k, s_ctx, mode) for k in cfg.pattern)
+    head = 2 * cfg.d_model * cfg.vocab_size * tokens if cfg.vocab_size else 0
+    fwd = fwd_stack + head
+    if mode == "train":
+        mult = 3.0 + (1.0 if cfg.remat else 0.0)  # fwd + 2x bwd (+ remat refwd)
+        flops = mult * fwd
+    else:
+        flops = fwd
+
+    # ---- params --------------------------------------------------------
+    N = n_params(cfg)
+    N_act = n_active_params(cfg)
+    P_bytes = N * plan.param_dtype_bytes
+
+    tp_ways = plan.tp_ways
+    data_ways = plan.data_ways
+    # per-device shards (FSDP shards the tp-replicated remainder over data)
+    shard_div = tp_ways * (data_ways if plan.fsdp else 1)
+    P_local = P_bytes / max(1, shard_div)
+
+    # Expert weights stay expert-parallel over `model` even under dp_dense.
+    _f_e = cfg.moe_d_ff or cfg.d_ff
+    _n_moe = sum(1 for k in cfg.pattern if k == "moe")
+    P_expert = (3 * cfg.d_model * _f_e * cfg.num_experts * _n_moe
+                * plan.param_dtype_bytes) if cfg.num_experts else 0
+    P_rest = P_bytes - P_expert
+    exp_tp = plan.model if (cfg.num_experts and plan.model > 1
+                            and (plan.dense_tp or plan.dp_dense)) else 1
+    read_unit = P_rest / max(1, tp_ways) + P_expert / exp_tp
+
+    # ---- HBM bytes per device ------------------------------------------
+    tok_dev = tokens / max(1, data_ways)  # tokens per data-shard replica
+    d_bytes = 2  # bf16 activations
+    act_rw = 12  # reads+writes of the residual stream per block (empirical c)
+    vocab_shard = plan.model if (plan.dense_tp or plan.dp_dense) and \
+        cfg.vocab_size and cfg.vocab_size % plan.model == 0 else 1
+    if mode == "decode":
+        # decode is cache-bound: read the whole KV/recurrent cache once/token
+        cache_bytes = _cache_bytes_dev(cfg, B, S, plan)
+        # FSDP decode still all-gathers, then reads gathered weights locally:
+        weights_read = read_unit
+        hbm = cache_bytes + weights_read + tok_dev * cfg.d_model * d_bytes * len(cfg.pattern)
+    else:
+        weights_read = 3 * read_unit
+        if mode == "train":
+            weights_read *= plan.accum_steps  # re-read per micro-batch
+            opt_rw = 7 * 4 * N / max(1, shard_div)  # master+mu+nu r/w, fp32
+        else:
+            opt_rw = 0
+        acts = tok_dev * cfg.d_model * d_bytes * act_rw * len(cfg.pattern)
+        if mode == "train":
+            acts *= 2.5  # bwd re-reads saved inputs + writes grads
+        logits_bytes = 0.0
+        if cfg.vocab_size and mode == "train" and not plan.chunked_ce:
+            # materialized fp32 logits: write fwd, read for CE, read in bwd
+            logits_bytes = 3 * tok_dev * cfg.vocab_size / vocab_shard * 4
+        hbm = weights_read + opt_rw + acts + logits_bytes
+
+    # ---- ICI link bytes per device --------------------------------------
+    ici = 0.0
+    detail: Dict[str, float] = {}
+    dm1_d = (data_ways - 1) / data_ways if data_ways > 1 else 0.0
+    mm1_m = (plan.model - 1) / plan.model if plan.model > 1 else 0.0
+
+    # per-pass gatherable bytes: non-expert / tp-ways + expert / expert-ways
+    # (expert weights are never FSDP-gathered across the whole machine)
+    gather_unit = read_unit
+
+    if plan.fsdp and data_ways > 1 and mode == "train":
+        # ZeRO-3: all-gather params each micro fwd + bwd; reduce-scatter
+        # grads once (grads travel in the param dtype — bf16).
+        ag = 2 * plan.accum_steps * gather_unit * dm1_d
+        rs = gather_unit * dm1_d
+        ici += ag + rs
+        detail["fsdp_allgather"] = ag
+        detail["grad_reducescatter"] = rs
+    elif mode == "train" and data_ways > 1:
+        # plain DP: all-reduce fp32 grads
+        ar = 2 * (gather_unit * 4 / plan.param_dtype_bytes) * dm1_d
+        ici += ar
+        detail["grad_allreduce"] = ar
+    elif plan.fsdp and data_ways > 1:
+        ag = gather_unit * dm1_d
+        ici += ag
+        detail["fsdp_allgather"] = ag
+
+    if tp_ways > 1:
+        # TP: 2 activation all-reduces per block fwd (+2 bwd, + remat refwd)
+        per_block = 2 * 2 * tok_dev * cfg.d_model * d_bytes * mm1_m
+        n_mult = (3.0 + (1.0 if cfg.remat else 0.0)) if mode == "train" else 1.0
+        tp = per_block * len(cfg.pattern) * n_mult / 2  # /2: only matmul outs
+        ici += tp
+        detail["tp_allreduce"] = tp
+    # MoE all-to-all: dispatch + combine per moe layer (expert parallelism
+    # stays on the model axis even under dp_dense)
+    n_moe = sum(1 for k in cfg.pattern if k == "moe")
+    if n_moe and plan.model > 1 and (plan.dense_tp or plan.dp_dense):
+        a2a = (2 * tok_dev * max(1, cfg.experts_per_token) * cfg.capacity_factor
+               * cfg.d_model * d_bytes * mm1_m * n_moe)
+        if mode == "train":
+            a2a *= 3.0 + (1.0 if cfg.remat else 0.0)
+        ici += a2a
+        detail["moe_all_to_all"] = a2a
+
+    if plan.pods > 1 and mode == "train":
+        # cross-pod gradient reduction (hierarchical: pod-local reduce over
+        # ICI first, then 1/data of the volume crosses the DCI boundary),
+        # expressed in ICI-equivalent bytes so one divisor serves all terms
+        ar_pod = 2 * (gather_unit / max(1, plan.data)) * (plan.pods - 1) / plan.pods
+        ici += ar_pod * (ICI_BW / plan.dci_bw)
+        detail["pod_allreduce_dci"] = ar_pod
+
+    detail["head_flops"] = head * (4.0 if mode == "train" else 1.0)
+    detail["stack_flops"] = flops - detail["head_flops"]
+
+    return CostBreakdown(
+        flops_global=flops,
+        hbm_bytes_dev=hbm,
+        ici_bytes_dev=ici,
+        model_flops=(3.0 if mode == "train" else 1.0) * 2 * N_act * tokens,
+        n_params=N,
+        n_active=N_act,
+        detail=detail,
+    )
+
+
+def _cache_bytes_dev(cfg: ModelConfig, B: int, S: int, plan: ParallelPlan) -> float:
+    """Per-device bytes to read the full decode cache once."""
+    d_bytes = 2
+    total = 0.0
+    for k in cfg.pattern:
+        if k in ("attn",):
+            total += 2 * B * cfg.num_kv_heads * S * cfg.hd * d_bytes
+        elif k == "local":
+            C = min(S, cfg.window_size or S)
+            total += 2 * B * cfg.num_kv_heads * C * cfg.hd * d_bytes
+        elif k == "moe":
+            total += 2 * B * cfg.num_kv_heads * S * cfg.hd * d_bytes
+        elif k == "hstu":
+            total += 2 * B * cfg.num_heads * S * cfg.hd * d_bytes
+        elif k == "mlstm":
+            inner = cfg.rnn_width or 2 * cfg.d_model
+            H = cfg.num_heads
+            hd = inner // H
+            total += B * H * hd * hd * 4
+        elif k == "slstm":
+            total += 4 * B * cfg.d_model * 4
+        elif k == "rglru":
+            total += B * (cfg.rnn_width or cfg.d_model) * 4
+    # cache is sharded over batch (data axis) and, where possible, model axis
+    shard = plan.data_ways if B >= plan.data_ways else (
+        plan.data if B >= plan.data else 1
+    )
+    kv_model = plan.model if (plan.dense_tp and not plan.dp_dense) else 1
+    return total / shard / kv_model * 1.0

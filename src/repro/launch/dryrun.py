@@ -1,0 +1,317 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks the device count on
+# first init. 512 placeholder host devices back both production meshes
+# (16x16 single pod uses the first 256). Never set this globally.
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch × input-shape × mesh)
+combination with ShapeDtypeStruct inputs (no allocation) and extract the
+memory / cost / collective numbers the roofline analysis consumes.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+
+A failure here (sharding mismatch, OOM at compile, unsupported collective)
+is a bug in the system, not in the script.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.dist import DistContext
+from repro.common.params import shape_dtype_tree
+from repro.common.sharding import (
+    DEFAULT_RULES,
+    LogicalRules,
+    fit_spec_to_shape,
+    logical_to_mesh_spec,
+)
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs.registry import (
+    ARCHS,
+    ASSIGNED,
+    get_config,
+    long_context_variant,
+    supports_shape,
+)
+from repro.launch import hlo_analysis as ha
+from repro.launch.mesh import make_production_mesh, rules_for_mesh
+from repro.models.transformer import lm_param_defs
+from repro.optim.adam import Adam
+from repro.train import trainer as T
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input.
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Weak-type-correct, shardable, zero-allocation input stand-ins."""
+    return T.batch_struct(cfg, shape)
+
+
+def _sharding_tree(spec_tree, mesh: Mesh, struct_tree=None):
+    """NamedShardings from a PartitionSpec tree; when the matching structs are
+    given, every spec is first relaxed to what its shape can honor."""
+    if struct_tree is None:
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    specs_flat = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    structs_flat, treedef = jax.tree.flatten(struct_tree)
+    assert len(specs_flat) == len(structs_flat)
+    fixed = [
+        NamedSharding(mesh, fit_spec_to_shape(sp, st.shape, mesh))
+        for sp, st in zip(specs_flat, structs_flat)
+    ]
+    return jax.tree.unflatten(treedef, fixed)
+
+
+def _named_batch_shardings(batch_structs, mesh: Mesh, rules: LogicalRules):
+    def spec_for(s):
+        spec = logical_to_mesh_spec(("batch",) + (None,) * (len(s.shape) - 1), rules)
+        return NamedSharding(mesh, fit_spec_to_shape(spec, s.shape, mesh))
+
+    return jax.tree.map(spec_for, batch_structs)
+
+
+# ---------------------------------------------------------------------------
+# One dry-run case
+# ---------------------------------------------------------------------------
+
+
+def run_case(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    rules: Optional[LogicalRules] = None,
+    verbose: bool = True,
+    dense_tp: bool = True,
+    fsdp: bool = True,
+    accum_steps: int = 0,  # 0 = auto (target ~1 sequence/device/micro-batch)
+    chunked_ce: bool = False,  # §Perf H3: streaming head+CE
+    dp_dense: bool = False,  # §Perf H1/H2: batch over data×model, full FSDP
+    cfg_override: Optional[ModelConfig] = None,
+) -> Dict[str, Any]:
+    cfg = cfg_override or get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if not supports_shape(cfg, shape_name):
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "encoder-only: no decode step"}
+    if shape_name == "long_500k":
+        cfg = long_context_variant(cfg)
+
+    if rules is None:
+        from repro.common.sharding import DP_DENSE_RULES, PAPER_FAITHFUL_RULES
+
+        if dp_dense:
+            base_rules = DP_DENSE_RULES
+        else:
+            base_rules = DEFAULT_RULES if dense_tp else PAPER_FAITHFUL_RULES
+    else:
+        base_rules = rules
+    mrules = rules_for_mesh(mesh, base_rules)
+    act_spec = logical_to_mesh_spec(("batch", None, None), mrules)
+    dist = DistContext(
+        mesh=mesh,
+        batch_axes=tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+        expert_parallel=not dp_dense or bool(cfg.num_experts),
+        act_spec=act_spec,
+    )
+
+    if dp_dense:
+        fsdp_axes: tuple = ("data", "model")
+    else:
+        fsdp_axes = ("data",)
+    pspecs = T.param_specs(
+        cfg, mrules, fsdp=fsdp, data_axes=fsdp_axes,
+        axis_sizes={a: mesh.shape.get(a, 1) for a in fsdp_axes},
+    )
+    pshard = _sharding_tree(pspecs, mesh)
+    pstructs = shape_dtype_tree(lm_param_defs(cfg))
+    batch_structs = input_specs(cfg, shape)
+    bshard = _named_batch_shardings(batch_structs, mesh, mrules)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            opt = Adam(lr=1e-4)
+            ostructs = T.opt_state_structs(cfg)
+            oshard = _sharding_tree(T.opt_state_specs(pspecs), mesh)
+            if accum_steps == 0:
+                # §5.2 gradient accumulation doubles as the activation-memory
+                # lever: aim for ~1 sequence per device per micro-batch on
+                # big models, full batch on small ones.
+                ndata = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+                if dp_dense:
+                    ndata *= mesh.shape.get("model", 1)
+                per_dev = max(1, shape.global_batch // ndata)
+                accum_steps = per_dev if cfg.d_model >= 4096 else max(1, per_dev // 4)
+            accum_steps = max(1, min(accum_steps, shape.global_batch))
+            step = T.make_train_step(cfg, opt, dist=dist, accum_steps=accum_steps,
+                                     chunked_ce=chunked_ce,
+                                     grad_shardings=pshard)
+            lowered = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, bshard),
+                donate_argnums=(0, 1),
+            ).lower(pstructs, ostructs, batch_structs)
+        elif shape.kind == "prefill":
+            step = T.make_prefill_step(cfg, dist=dist)
+            lowered = jax.jit(
+                step, in_shardings=(pshard, bshard)
+            ).lower(pstructs, batch_structs)
+        else:  # decode: one token against a seq_len cache
+            step = T.make_decode_step(cfg, dist=dist)
+            cstructs = T.cache_structs(cfg, shape.global_batch, shape.seq_len)
+            cshard = _sharding_tree(T.cache_specs(cfg, mrules), mesh, cstructs)
+            tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            tshard = NamedSharding(
+                mesh,
+                fit_spec_to_shape(
+                    logical_to_mesh_spec(("batch", None), mrules), tok.shape, mesh
+                ),
+            )
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jax.jit(
+                step,
+                in_shardings=(pshard, cshard, tshard, None),
+                donate_argnums=(1,),
+            ).lower(pstructs, cstructs, tok, pos)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost_list = compiled.cost_analysis()
+    cost = cost_list if isinstance(cost_list, dict) else (cost_list[0] if cost_list else {})
+    hlo = compiled.as_text()
+    roof = ha.roofline_terms(cost, hlo)
+    coll = ha.collective_bytes(hlo)
+
+    rec: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "accum_steps": accum_steps if shape.kind == "train" else None,
+        "fsdp": fsdp,
+        "variant": ("dp-dense" if dp_dense else "tp")
+        + ("+chunked-ce" if chunked_ce else ""),
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "roofline": roof.row(),
+        "collectives": {
+            "bytes_by_kind": coll.bytes_by_kind,
+            "count_by_kind": coll.count_by_kind,
+        },
+    }
+    if mem is not None:
+        for attr in (
+            "temp_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "generated_code_size_in_bytes",
+        ):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+    if verbose:
+        print(f"[{arch} × {shape_name} × {rec['mesh']}] OK "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s")
+        if mem is not None:
+            print(f"  memory_analysis: args={rec.get('argument_size_in_bytes', 0):,} "
+                  f"temp={rec.get('temp_size_in_bytes', 0):,} "
+                  f"out={rec.get('output_size_in_bytes', 0):,}")
+        print(f"  cost_analysis: flops={roof.flops:.3e} bytes={roof.hbm_bytes:.3e}")
+        print(f"  collectives: {coll.summary()}")
+        print(f"  roofline(s): compute={roof.compute_s:.4f} memory={roof.memory_s:.4f} "
+              f"collective={roof.collective_s:.4f} -> dominant={roof.dominant}")
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one architecture id")
+    ap.add_argument("--shape", default=None, choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true", help="all 10 archs × 4 shapes")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2×16×16 mesh instead of 16×16")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--paper-faithful", action="store_true",
+                    help="replicated dense model (paper §3) instead of TP")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="disable ZeRO-3 data-axis sharding (baseline memory)")
+    ap.add_argument("--chunked-ce", action="store_true",
+                    help="§Perf H3: streaming head+CE (no full logits tensor)")
+    ap.add_argument("--dp-dense", action="store_true",
+                    help="§Perf H1/H2: batch over data×model + full FSDP, no TP")
+    ap.add_argument("--accum", type=int, default=0)
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(), make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    if args.all:
+        cases = [(a, s) for a in ASSIGNED for s in INPUT_SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cases = [(args.arch, args.shape)]
+
+    records, failures = [], []
+    for mesh in meshes:
+        for arch, shape in cases:
+            try:
+                rec = run_case(arch, shape, mesh,
+                               dense_tp=not args.paper_faithful,
+                               fsdp=not args.no_fsdp,
+                               chunked_ce=args.chunked_ce,
+                               dp_dense=args.dp_dense,
+                               accum_steps=args.accum)
+            except Exception as e:  # a failure here is a system bug — report all
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "x".join(str(s) for s in mesh.devices.shape),
+                       "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
+                failures.append(rec)
+            records.append(rec)
+
+    if args.out:
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        with open(args.out, "w") as f:
+            json.dump(existing + records, f, indent=1)
+
+    ok = sum(r["status"] == "ok" for r in records)
+    sk = sum(r["status"] == "skipped" for r in records)
+    print(f"\n=== dry-run: {ok} ok, {sk} skipped, {len(failures)} failed ===")
+    for r in failures:
+        print(f"  FAILED {r['arch']} × {r['shape']} × {r['mesh']}: {r['error']}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

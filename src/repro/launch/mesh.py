@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+Target: TPU v5e, 256 chips/pod. Single pod = (data=16, model=16); two pods
+add a leading `pod` axis = (2, 16, 16). The `model` axis carries the paper's
+model-parallel sparse tables AND the dense TP extension; batch shards over
+`pod` x `data` (see common/sharding.py).
+
+Functions, not module-level constants — importing this module must never
+touch jax device state (the dry-run forces 512 host devices *before* any jax
+initialization; smoke tests keep the single real device).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.common.sharding import DEFAULT_RULES, LogicalRules
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(data: int = 2, model: int = 4) -> Mesh:
+    """Small mesh over forced host devices (integration tests)."""
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+
+
+def rules_for_mesh(mesh: Mesh, rules: LogicalRules = DEFAULT_RULES) -> LogicalRules:
+    """Drop mesh axes the current mesh doesn't have (e.g. 'pod' on one pod)."""
+    present = set(mesh.axis_names)
+
+    def fix(v):
+        axes = (v,) if isinstance(v, str) else tuple(v or ())
+        kept = tuple(a for a in axes if a in present)
+        if not kept:
+            return None
+        return kept[0] if len(kept) == 1 else kept
+
+    return LogicalRules({k: fix(v) for k, v in rules.rules.items()})

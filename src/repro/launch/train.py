@@ -1,0 +1,79 @@
+"""Generic training launcher for the assigned pool architectures.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --steps 20 --batch 4 --seq 64 --reduced
+
+Runs `make_train_step` on whatever devices exist (the single CPU here; the
+production mesh via the dry-run). Synthetic next-token data; reports loss,
+grad norm, and throughput. `--arch grm-4g` delegates to the full GRM driver
+(examples/train_grm.py) which owns the sparse side.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.optim.adam import Adam
+from repro.train import trainer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced dims (CPU-runnable)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.arch_type == "grm":
+        raise SystemExit("use examples/train_grm.py for the GRM "
+                         "(it owns the sparse tables)")
+
+    opt = Adam(lr=args.lr)
+    params, ostate = T.init_all(cfg, jax.random.PRNGKey(0), opt)
+    step_fn = jax.jit(T.make_train_step(cfg, opt, accum_steps=args.accum))
+
+    rng = np.random.default_rng(0)
+    B, S = args.batch, args.seq
+
+    def make_batch():
+        batch = {"mask": jnp.ones((B, S), bool)}
+        if cfg.frontend == "audio_frames":
+            batch["frames"] = jnp.asarray(rng.normal(0, 0.02, (B, S, cfg.d_model)),
+                                          jnp.float32)
+            batch["targets"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                                           jnp.int32)
+        elif cfg.frontend == "vision_patches":
+            Ptok = min(cfg.frontend_tokens, S // 2)
+            import dataclasses
+            batch["patches"] = jnp.asarray(rng.normal(0, 0.02, (B, Ptok, cfg.d_model)),
+                                           jnp.float32)
+            batch["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S - Ptok)), jnp.int32)
+        else:
+            batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                                          jnp.int32)
+        return batch
+
+    t0 = time.time()
+    for step in range(args.steps):
+        params, ostate, m = step_fn(params, ostate, make_batch())
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f} "
+                  f"tok/s {(step + 1) * B * S / (time.time() - t0):.0f}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

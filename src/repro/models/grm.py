@@ -1,0 +1,71 @@
+"""The paper's GRM: feature IDs → merged dynamic embedding tables → HSTU
+stack → MMoE multi-task head (paper §2, Fig. 3).
+
+The sparse side (hash tables, merged lookup, two-stage dedup) is owned by
+`core/`; this module is the *dense* model. `grm_apply` consumes already-
+looked-up embeddings so the trainer can compose
+
+    emb, stats = sharded_lookup(table_state, encoded_ids)   # model parallel
+    logits     = grm_apply(dense_params, emb, mask)          # data parallel
+
+and gradients flow through the lookup's gather-transpose into the table
+shards (the paper's backward update path). Targets: per-position CTR /
+CTCVR labels; loss is masked sigmoid cross-entropy per task.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.dist import DistContext
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.mmoe import mmoe_apply, mmoe_param_defs
+from repro.models.transformer import apply_stack, stack_param_defs
+
+
+def grm_param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    assert cfg.arch_type == "grm"
+    return {
+        "stack": stack_param_defs(cfg),  # HSTU layers (block_pattern = ('hstu',))
+        "final_norm": L.layer_norm_defs(cfg.d_model),
+        "mmoe": mmoe_param_defs(cfg),
+    }
+
+
+def grm_apply(
+    params: Dict[str, Any],
+    emb: jax.Array,  # (B, S, d) looked-up feature embeddings
+    mask: jax.Array,  # (B, S) bool — valid (non-padding) positions
+    cfg: ModelConfig,
+    dist: Optional[DistContext] = None,
+) -> jax.Array:
+    B, S, _ = emb.shape
+    x = emb.astype(jnp.dtype(cfg.dtype)) * mask[..., None].astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, _, _ = apply_stack(params["stack"], x, positions, cfg, mode="train", dist=dist)
+    x = L.layer_norm(params["final_norm"], x, cfg.norm_eps)
+    return mmoe_apply(params["mmoe"], x, cfg)  # (B, S, num_tasks)
+
+
+def grm_loss(
+    logits: jax.Array,  # (B, S, T)
+    labels: jax.Array,  # (B, S, T) in {0, 1}
+    mask: jax.Array,  # (B, S)
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Masked sigmoid CE summed over tasks, averaged over valid positions.
+
+    Returns (sum_loss, metrics) where sum_loss is the *sum* over valid
+    positions — the weighted gradient sync of dynamic sequence balancing
+    (train/weighted_sync.py) divides by the globally-summed token count, so
+    per-device averages never bias the gradient (paper §5.1).
+    """
+    z = logits.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    ce = jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    m = mask[..., None].astype(jnp.float32)
+    total = jnp.sum(ce * m)
+    count = jnp.sum(m) * 1.0
+    return total, {"loss_sum": total, "weight": count}

@@ -1,0 +1,94 @@
+"""HSTU block — Hierarchical Sequential Transduction Unit (paper §2, Eq. 1–3).
+
+    U, Q, K, V = Split(φ1(MLP(E)))          one fused input projection, SiLU
+    O          = φ2(Q Kᵀ) V                 *pointwise* SiLU attention (no
+                                             softmax), causally masked and
+                                             normalized by attended count
+    H          = MLP(Norm(O ⊙ U))           gated output projection
+
+The attention weights are elementwise SiLU — linear in V — so streaming
+accumulation needs no online-max bookkeeping; `chunked_silu_attention` is a
+plain scan. The perf-critical fused form (tiles of U/Q/K/V processed in
+VMEM with causal block skipping — the paper's §5.2 operator fusion) lives in
+repro/kernels/hstu_attention.py; `repro.kernels.ops.hstu_attention`
+dispatches between the Pallas kernel and the jnp path used here.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import ParamDef
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def hstu_param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.hd
+    dt = jnp.dtype(cfg.dtype)
+    h_ax = "heads" if cfg.heads_shardable else None
+    return {
+        "norm": L.layer_norm_defs(d),
+        "win": ParamDef((d, 4, H, hd), (None, None, h_ax, None), dtype=dt),
+        "onorm": L.layer_norm_defs(H * hd),
+        "wout": ParamDef((H, hd, d), (h_ax, None, None), dtype=dt),
+    }
+
+
+class HSTUBlock:
+    @staticmethod
+    def defs(cfg: ModelConfig, window: int) -> Dict[str, Any]:
+        return hstu_param_defs(cfg)
+
+    @staticmethod
+    def apply(p, x, positions, cfg, *, window, mode, cache, cache_pos, dist):
+        from repro.kernels import ops  # kernels never import models
+
+        B, S, d = x.shape
+        H, hd = cfg.num_heads, cfg.hd
+        xn = L.layer_norm(p["norm"], x, cfg.norm_eps)
+        uqkv = jax.nn.silu(jnp.einsum("btd,dfhk->btfhk", xn, p["win"]))  # φ1
+        u, q, k, v = (uqkv[:, :, i] for i in range(4))  # each (B,S,H,hd)
+
+        if mode == "decode":
+            C = cache.k.shape[2]
+            slot = (cache_pos % C).astype(jnp.int32)
+            zero = jnp.int32(0)
+            k_new = jax.lax.dynamic_update_slice(
+                cache.k, k.swapaxes(1, 2).astype(cache.k.dtype), (zero, zero, slot, zero))
+            v_new = jax.lax.dynamic_update_slice(
+                cache.v, v.swapaxes(1, 2).astype(cache.v.dtype), (zero, zero, slot, zero))
+            new_cache = L.KVCache(k_new, v_new)
+            kc, vc = k_new.swapaxes(1, 2), v_new.swapaxes(1, 2)
+            k_pos = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (B, C))
+            q_pos = jnp.broadcast_to(cache_pos.astype(jnp.int32), (B, 1))
+            o = ops.hstu_attention(q, kc, vc, u, q_pos, k_pos,
+                                   chunk=cfg.attn_chunk, impl="ref")
+        else:
+            o = ops.hstu_attention(q, k, v, u, positions, positions,
+                                   chunk=cfg.attn_chunk)
+            new_cache = None
+            if mode == "prefill":
+                new_cache = L.KVCache(
+                    k.swapaxes(1, 2).astype(jnp.dtype(cfg.dtype)),
+                    v.swapaxes(1, 2).astype(jnp.dtype(cfg.dtype)),
+                )
+
+        # `o` already carries the fused ⊙U epilogue (ops.hstu_attention).
+        g = L.layer_norm(p["onorm"], o.reshape(B, S, H * hd), cfg.norm_eps)
+        y = jnp.einsum("bthk,hkd->btd", g.reshape(B, S, H, hd), p["wout"])
+        return x + y, new_cache, jnp.float32(0.0)
+
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, length: int, window: int):
+        dt = jnp.dtype(cfg.dtype)
+        shape = (batch, cfg.num_heads, length, cfg.hd)
+        return L.KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+    @staticmethod
+    def cache_axes(cfg: ModelConfig, window: int):
+        ax = "heads" if cfg.heads_shardable else None
+        spec = ("batch", ax, "kv_seq", None)
+        return L.KVCache(spec, spec)

@@ -1,0 +1,436 @@
+"""Shared dense-stack layers: norms, RoPE, GQA attention (full / chunked /
+windowed / decode), gated MLP, embeddings.
+
+Attention memory strategy: for long sequences a naive (S, S) score tensor is
+impossible (32k prefill => hundreds of GB), so `chunked_attention` runs an
+online-softmax scan over KV chunks — the jnp analogue of FlashAttention's
+outer loop, memory O(S * chunk). XLA lowers the scan efficiently; the
+GRM-specific *fused* kernel lives in repro/kernels (the paper's §5.2 op).
+
+GQA sharding: when `cfg.heads_shardable`, Q heads (and KV heads if divisible)
+carry the 'heads'/'kv_heads' logical axes => Megatron-style TP. Otherwise
+(llava 56H, llama4 40H on a 16-way axis) attention weights shard on the
+embed ('attn_fan') dim instead so the parameters still distribute; see
+DESIGN.md §5.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.params import ParamDef
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm_defs(d: int) -> Dict[str, ParamDef]:
+    return {"scale": ParamDef((d,), (None,), init="ones")}
+
+
+def rms_norm(params, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layer_norm_defs(d: int) -> Dict[str, ParamDef]:
+    return {
+        "scale": ParamDef((d,), (None,), init="ones"),
+        "bias": ParamDef((d,), (None,), init="zeros"),
+    }
+
+
+def layer_norm(params, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"] + params["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )  # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (..., S, 1, half)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention_param_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.heads_shardable:
+        fan, h_ax = None, "heads"
+        kv_ax = "kv_heads" if cfg.kv_shardable else None
+    else:  # embed-dim (row/col-parallel) fallback
+        fan, h_ax, kv_ax = "attn_fan", None, None
+    defs = {
+        "wq": ParamDef((d, H, hd), (fan, h_ax, None), dtype=dt),
+        "wk": ParamDef((d, K, hd), (fan, kv_ax, None), dtype=dt),
+        "wv": ParamDef((d, K, hd), (fan, kv_ax, None), dtype=dt),
+        "wo": ParamDef((H, hd, d), (h_ax, None, fan), dtype=dt),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H, hd), (h_ax, None), init="zeros", dtype=dt)
+        defs["bk"] = ParamDef((K, hd), (kv_ax, None), init="zeros", dtype=dt)
+        defs["bv"] = ParamDef((K, hd), (kv_ax, None), init="zeros", dtype=dt)
+    return defs
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, K, C, hd) — C = cache length (S_max or window)
+    v: jax.Array  # (B, K, C, hd)
+    # filled-length bookkeeping lives in the caller's `pos` scalar
+
+
+def _mask_bias(
+    q_pos: jax.Array, k_pos: jax.Array, causal: bool, window: int
+) -> jax.Array:
+    """Additive mask (0 / -inf) of shape (..., Sq, Sk)."""
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(dq.shape, dk.shape), bool)
+    if causal:
+        ok &= dk <= dq
+    if window > 0:
+        ok &= dq - dk < window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,Sq,K,G,hd), k: (B,Sk,K,hd) -> (B,K,G,Sq,Sk), fp32."""
+    return jnp.einsum(
+        "bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32
+    )
+
+
+def full_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    causal: bool,
+    window: int,
+) -> jax.Array:
+    """Naive attention (short sequences / reference). q:(B,Sq,H,hd), k/v:(B,Sk,K,hd)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd) * (hd**-0.5)
+    scores = _gqa_scores(qg, k)  # (B,K,G,Sq,Sk) fp32
+    scores = scores + _mask_bias(q_pos, k_pos, causal, window)[:, None, None]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    causal: bool,
+    window: int,
+    chunk: int,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks (memory O(Sq * chunk)).
+
+    The jnp analogue of FlashAttention's streaming loop: running max `m`,
+    normalizer `l`, and output accumulator are carried through a lax.scan.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=jnp.iinfo(jnp.int32).max)
+    kc = k.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    qg = (q.reshape(B, Sq, K, G, hd) * (hd**-0.5)).astype(jnp.float32)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kb, vb, pb = blk  # (B,chunk,K,hd), (B,chunk,K,hd), (B,chunk)
+        s = _gqa_scores(qg, kb)  # (B,K,G,Sq,chunk)
+        s = s + _mask_bias(q_pos, pb, causal, window)[:, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new == -inf) against NaNs
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])  # (B,K,G,Sq,chunk)
+        scale = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        scale = jnp.where(jnp.isfinite(scale), scale, 0.0)
+        l = l * scale + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p, vb.astype(jnp.float32))
+        acc = acc * scale[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, K, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def sharded_decode_attention(
+    q: jax.Array,
+    kc: jax.Array,
+    vc: jax.Array,
+    cache_pos: jax.Array,
+    dist,
+) -> jax.Array:
+    """Decode attention with the KV-cache *length* sharded over the model axis.
+
+    None of the assigned archs has num_kv_heads divisible by the 16-way model
+    axis, so head-sharding cannot distribute a (B, C, K, hd) decode cache.
+    Instead C is sharded over `model`; each device computes partial softmax
+    statistics (m, l, acc) over its local slice and the exact result is
+    reconstructed with a log-sum-exp merge (pmax + rescale + psum). This is
+    a beyond-paper extension (the paper's GRM decode caches are small); see
+    DESIGN.md §5.
+
+    q: (B, 1, H, hd); kc/vc: (B, C, K, hd) with C sharded; returns (B,1,H,hd).
+    """
+    ax = dist.model_axis
+    B, _, H, hd = q.shape
+    K = kc.shape[2]
+    G = H // K
+
+    def body(q, kc, vc):
+        n_shards = jax.lax.axis_size(ax)
+        C_loc = kc.shape[1]
+        idx = jax.lax.axis_index(ax)
+        slots = idx * C_loc + jnp.arange(C_loc, dtype=jnp.int32)  # global positions
+        qg = (q.reshape(B, 1, K, G, hd) * (hd**-0.5)).astype(jnp.float32)
+        s = _gqa_scores(qg, kc)  # (B,K,G,1,C_loc)
+        mask = (slots <= cache_pos.astype(jnp.int32))[None, None, None, None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+        m = jnp.max(s, axis=-1)  # (B,K,G,1)
+        m_g = jax.lax.pmax(m, ax)
+        m_safe = jnp.where(jnp.isfinite(m_g), m_g, 0.0)
+        p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+        l = jax.lax.psum(jnp.sum(p, axis=-1), ax)
+        acc = jax.lax.psum(
+            jnp.einsum("bkgqs,bskh->bkgqh", p, vc.astype(jnp.float32)), ax
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, hd).astype(q.dtype)
+
+    from jax.sharding import PartitionSpec as P
+
+    return jax.shard_map(
+        body,
+        mesh=dist.mesh,
+        in_specs=(P(), P(None, ax), P(None, ax)),
+        out_specs=P(),
+        axis_names={ax},
+        check_vma=False,
+    )(q, kc, vc)
+
+
+def attention_apply(
+    params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    window: int = 0,
+    mode: str = "train",
+    cache: Optional[KVCache] = None,
+    cache_pos: Optional[jax.Array] = None,
+    dist=None,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    """GQA attention.
+
+    train  : x (B, S, d), full self-attention, no cache.
+    prefill: as train, but returns the populated KV cache (ring-buffer layout
+             of the last `window` positions when window > 0).
+    decode : cache given, x (B, 1, d); new K/V written at `cache_pos`
+             (modulo cache length — ring buffer when window > 0). Large full-
+             attention caches take the sequence-sharded LSE-merge path.
+    """
+    B, S, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        k_pos = positions
+        if S > 2 * cfg.attn_chunk:
+            out = chunked_attention(
+                q, k, v, positions, k_pos, cfg.causal, window, cfg.attn_chunk
+            )
+        else:
+            out = full_attention(q, k, v, positions, k_pos, cfg.causal, window)
+        if mode == "prefill":
+            C = min(S, window) if window > 0 else S
+            kk = k[:, S - C:].transpose(0, 2, 1, 3)  # (B, K, C, hd), last C tokens
+            vv = v[:, S - C:].transpose(0, 2, 1, 3)
+            if window > 0 and S != C:
+                # ring-buffer layout: token at position p lives in slot p % C
+                slot = np.arange(S - C, S) % C
+                order = np.argsort(slot)
+                kk, vv = kk[:, :, order], vv[:, :, order]
+            new_cache = KVCache(kk.astype(jnp.dtype(cfg.dtype)),
+                                vv.astype(jnp.dtype(cfg.dtype)))
+        else:
+            new_cache = None
+    else:
+        C = cache.k.shape[2]
+        slot = (cache_pos % C).astype(jnp.int32)
+        zero = jnp.int32(0)
+        k_new = jax.lax.dynamic_update_slice(
+            cache.k, k.transpose(0, 2, 1, 3).astype(cache.k.dtype), (zero, zero, slot, zero)
+        )
+        v_new = jax.lax.dynamic_update_slice(
+            cache.v, v.transpose(0, 2, 1, 3).astype(cache.v.dtype), (zero, zero, slot, zero)
+        )
+        new_cache = KVCache(k_new, v_new)
+        # Positions of cache slots: ring buffer when window>0, else identity.
+        slots = jnp.arange(C, dtype=jnp.int32)
+        if window > 0:
+            # slot i holds the latest position p with p % C == i and p <= cache_pos
+            cur = cache_pos.astype(jnp.int32)
+            k_positions = cur - ((cur - slots) % C)
+        else:
+            k_positions = slots
+        k_positions = jnp.broadcast_to(k_positions, (B, C))
+        kc = k_new.transpose(0, 2, 1, 3)  # (B, C, K, hd)
+        vc = v_new.transpose(0, 2, 1, 3)
+        q_pos = jnp.broadcast_to(cache_pos.astype(jnp.int32), (B, 1))
+        use_seq_shard = (
+            dist is not None
+            and getattr(dist, "shard_kv_seq", False)
+            and window == 0
+            and C % dist.model_size == 0
+            and C >= 16 * dist.model_size
+        )
+        if use_seq_shard:
+            out = sharded_decode_attention(q, kc, vc, cache_pos, dist)
+        elif C > 2 * cfg.attn_chunk:
+            out = chunked_attention(
+                q, kc, vc, q_pos, k_positions, True, window, cfg.attn_chunk
+            )
+        else:
+            out = full_attention(q, kc, vc, q_pos, k_positions, True, window)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, length: int, dtype=None) -> KVCache:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    shape = (batch, cfg.num_kv_heads, length, cfg.hd)
+    return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def kv_cache_axes(cfg: ModelConfig) -> KVCache:
+    """Logical axes for the cache.
+
+    KV heads shard when divisible by the model axis; otherwise the cache
+    *length* carries the 'kv_seq' logical axis (resolved to 'model'), pairing
+    with `sharded_decode_attention`. `logical_to_mesh_spec` dedups mesh axes,
+    so if 'kv_heads' already consumed 'model' the length stays unsharded.
+    """
+    ax = "kv_heads" if cfg.kv_shardable else None
+    spec = ("batch", ax, "kv_seq", None)
+    return KVCache(spec, spec)
+
+
+kv_cache_specs = kv_cache_axes  # legacy alias
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_param_defs(cfg: ModelConfig, d_ff: Optional[int] = None, gated: bool = True):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    mlp_ax = "mlp" if (cfg.tp <= 1 or f % cfg.tp == 0) else None
+    defs = {
+        "wi": ParamDef((d, f), ("embed", mlp_ax), dtype=dt),
+        "wo": ParamDef((f, d), (mlp_ax, "embed"), dtype=dt),
+    }
+    if gated:
+        defs["wg"] = ParamDef((d, f), ("embed", mlp_ax), dtype=dt)
+    return defs
+
+
+def mlp_apply(params, x: jax.Array, act=jax.nn.silu) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"])
+    if "wg" in params:
+        h = act(jnp.einsum("bsd,df->bsf", x, params["wg"])) * h
+    else:
+        h = act(h)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_param_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    v_ax = "vocab" if cfg.vocab_shardable else None
+    dt = jnp.dtype(cfg.dtype)
+    defs = {
+        "tok": ParamDef((cfg.vocab_size, cfg.d_model), (v_ax, "embed"), init="embed",
+                        scale=0.02, dtype=dt)
+    }
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef(
+            (cfg.d_model, cfg.vocab_size), ("embed", v_ax), dtype=dt
+        )
+    return defs
+
+
+def embed_tokens(params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def logits_out(params, x: jax.Array) -> jax.Array:
+    w = params.get("head")
+    if w is None:
+        w = params["tok"].T
+    return jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=jnp.float32)

@@ -1,0 +1,48 @@
+"""MMoE multi-task head (paper §2, Eq. 4).
+
+Each task owns a gating network over a shared pool of expert MLPs; the
+paper's variant keeps only the top-k gate entries (sparse activation):
+
+    y_task = Σ_{i ∈ topk} g_i(H) · Expert_i(H)
+
+Output: one logit per task (CTR, CTCVR) per sequence position.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import ParamDef
+from repro.configs.base import ModelConfig
+
+
+def mmoe_param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, E, f, T = cfg.d_model, cfg.mmoe_experts, cfg.mmoe_d_ff, cfg.num_tasks
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wi": ParamDef((E, d, f), ("expert", "embed", "expert_mlp"), dtype=dt),
+        "wo": ParamDef((E, f, d), ("expert", "expert_mlp", "embed"), dtype=dt),
+        "gates": ParamDef((T, d, E), (None, "embed", None), dtype=jnp.float32),
+        "task_heads": ParamDef((T, d), (None, "embed"), dtype=jnp.float32),
+        "task_bias": ParamDef((T,), (None,), init="zeros", dtype=jnp.float32),
+    }
+
+
+def mmoe_apply(p, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """h: (B, S, d) -> per-task logits (B, S, T)."""
+    expert_out = jnp.einsum("bsd,edf->bsef", h, p["wi"])
+    expert_out = jnp.einsum("bsef,efd->bsed", jax.nn.silu(expert_out), p["wo"])
+
+    gate_logits = jnp.einsum("bsd,tde->bste", h.astype(jnp.float32), p["gates"])
+    # keep only the top-k experts per task (paper: aggregate top-k outputs)
+    k = cfg.mmoe_topk or cfg.mmoe_experts
+    if k < cfg.mmoe_experts:
+        kth = jax.lax.top_k(gate_logits, k)[0][..., -1:]  # k-th largest
+        gate_logits = jnp.where(gate_logits >= kth, gate_logits, -jnp.inf)
+    g = jax.nn.softmax(gate_logits, axis=-1)  # (B, S, T, E)
+
+    mixed = jnp.einsum("bste,bsed->bstd", g, expert_out.astype(jnp.float32))
+    logits = jnp.einsum("bstd,td->bst", mixed, p["task_heads"]) + p["task_bias"]
+    return logits  # (B, S, num_tasks)

@@ -1,0 +1,207 @@
+"""Mixture-of-Experts block (llama4-scout top-1 + shared expert; phi3.5 top-2).
+
+Expert parallelism maps the paper's all-to-all communication pattern onto the
+dense stack: experts are sharded over the `model` mesh axis and tokens are
+dispatched with the same bucket → all-to-all → compute → all-to-all → combine
+round-trip the sparse embedding lookup uses (core/sharded_embedding.py). The
+dispatch runs inside a partial-manual `shard_map` (manual over `model` only;
+batch axes stay under the automatic partitioner), with a fixed per-expert
+capacity — overflow tokens are dropped (capacity_factor), standard for
+capacity-based MoE.
+
+Without a DistContext (CPU smoke tests, paper-faithful replicated-dense
+rules) the same bucketing runs locally against the full expert stack.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.dist import DistContext
+from repro.common.params import ParamDef
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def moe_param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    defs = {
+        "router": ParamDef((d, E), ("embed", None), dtype=jnp.float32),
+        "wi": ParamDef((E, d, f), ("expert", "embed", "expert_mlp"), dtype=dt),
+        "wg": ParamDef((E, d, f), ("expert", "embed", "expert_mlp"), dtype=dt),
+        "wo": ParamDef((E, f, d), ("expert", "expert_mlp", "embed"), dtype=dt),
+    }
+    if cfg.shared_expert:
+        defs["shared"] = L.mlp_param_defs(cfg, d_ff=f)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Token bucketing (shared by local and expert-parallel paths)
+# ---------------------------------------------------------------------------
+
+
+def _bucket_tokens(vecs: jax.Array, flat_e: jax.Array, E: int, cap: int):
+    """Pack token-slots into an (E, cap, d) buffer by expert id.
+
+    vecs: (n, d) — the vector for each token-slot; flat_e: (n,) expert ids.
+    Returns (buf, slot_pos, ok): token-slot i landed at buf[flat_e[i],
+    slot_pos[i]] iff ok[i] (capacity overflow drops, standard for
+    capacity-factor MoE).
+    """
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    start = jnp.searchsorted(se, jnp.arange(E + 1, dtype=se.dtype))
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - start[jnp.clip(se, 0, E)].astype(jnp.int32)
+    ok_sorted = pos_sorted < cap
+    buf = jnp.zeros((E, cap, vecs.shape[-1]), vecs.dtype)
+    buf = buf.at[
+        jnp.where(ok_sorted, se, E), jnp.where(ok_sorted, pos_sorted, 0)
+    ].set(vecs[order], mode="drop")
+    inv = jnp.argsort(order)
+    return buf, pos_sorted[inv], ok_sorted[inv]
+
+
+def _expert_mlp(recv: jax.Array, wi, wg, wo) -> jax.Array:
+    """recv: (..., E_loc, cap, d); weights (E_loc, d, f) / (E_loc, f, d)."""
+    h = jnp.einsum("...ecd,edf->...ecf", recv, wi)
+    g = jax.nn.silu(jnp.einsum("...ecd,edf->...ecf", recv, wg))
+    return jnp.einsum("...ecf,efd->...ecd", h * g, wo)
+
+
+def _load_balance_loss(probs: jax.Array, flat_e: jax.Array, E: int, k: int):
+    """Switch-style aux loss: E * sum_e mean_prob_e * frac_dispatched_e."""
+    n = probs.shape[0]
+    frac = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / max(1, n * k)
+    mean_p = jnp.mean(probs, axis=0)
+    return E * jnp.sum(mean_p * frac)
+
+
+# ---------------------------------------------------------------------------
+# MoE apply
+# ---------------------------------------------------------------------------
+
+
+def moe_apply(
+    p: Dict[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    dist: Optional[DistContext] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss scalar)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    xt = x.reshape(B * S, d)
+
+    logits = jnp.einsum("nd,de->ne", xt.astype(jnp.float32), p["router"])
+    top_p, top_e = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), k)  # (n, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    use_ep = (
+        dist is not None
+        and dist.expert_parallel
+        and E % dist.model_size == 0
+        and dist.model_size > 1
+    )
+    n = B * S
+    pad = 0
+    if use_ep:
+        mult = dist.model_size
+        pad = (-n) % mult
+        if pad:
+            xt = jnp.pad(xt, ((0, pad), (0, 0)))
+            top_e = jnp.pad(top_e, ((0, pad), (0, 0)))
+            top_p = jnp.pad(top_p, ((0, pad), (0, 0)))
+
+    flat_e = top_e.reshape(-1)  # (n*k,)
+    vecs = jnp.repeat(xt, k, axis=0) if k > 1 else xt
+
+    if use_ep:
+        n_shards = dist.model_size
+        E_loc = E // n_shards
+        n_loc = (n + pad) // n_shards
+        cap = max(8, int(math.ceil(n_loc * k * cfg.capacity_factor / E)))
+        ax = dist.model_axis
+
+        def body(vecs_l, flat_e_l, wi, wg, wo):
+            # vecs_l: (n_loc*k, d); weights carry the local expert shard.
+            buf, pos, ok = _bucket_tokens(vecs_l, flat_e_l, E, cap)
+            send = buf.reshape(n_shards, E_loc, cap, d)
+            recv = jax.lax.all_to_all(send, ax, split_axis=0, concat_axis=0,
+                                      tiled=True)  # (n_shards, E_loc, cap, d)
+            out = _expert_mlp(recv, wi, wg, wo)
+            back = jax.lax.all_to_all(out, ax, split_axis=0, concat_axis=0,
+                                      tiled=True).reshape(E * cap, d)
+            y = back[flat_e_l * cap + pos] * ok[:, None].astype(back.dtype)
+            return y
+
+        y_slots = jax.shard_map(
+            body,
+            mesh=dist.mesh,
+            in_specs=(P(ax), P(ax), P(ax), P(ax), P(ax)),
+            out_specs=P(ax),
+            axis_names={ax},
+            check_vma=False,
+        )(vecs, flat_e, p["wi"], p["wg"], p["wo"])
+    else:
+        cap = max(8, int(math.ceil((n + pad) * k * cfg.capacity_factor / E)))
+        buf, pos, ok = _bucket_tokens(vecs, flat_e, E, cap)
+        out = _expert_mlp(buf, p["wi"], p["wg"], p["wo"]).reshape(E * cap, d)
+        y_slots = out[flat_e * cap + pos] * ok[:, None].astype(out.dtype)
+
+    y = jnp.sum(
+        y_slots.reshape(-1, k, d) * top_p[..., None].astype(y_slots.dtype), axis=1
+    )
+    if pad:
+        y = y[:n]
+    y = y.reshape(B, S, d).astype(x.dtype)
+    if cfg.shared_expert:
+        y = y + L.mlp_apply(p["shared"], x)
+    aux = _load_balance_loss(jax.nn.softmax(logits, axis=-1),
+                             top_e.reshape(-1)[: n * k], E, k)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Block
+# ---------------------------------------------------------------------------
+
+
+class MoEBlock:
+    @staticmethod
+    def defs(cfg: ModelConfig, window: int) -> Dict[str, Any]:
+        return {
+            "norm1": L.rms_norm_defs(cfg.d_model),
+            "attn": L.attention_param_defs(cfg),
+            "norm2": L.rms_norm_defs(cfg.d_model),
+            "moe": moe_param_defs(cfg),
+        }
+
+    @staticmethod
+    def apply(p, x, positions, cfg, *, window, mode, cache, cache_pos, dist):
+        h, new_cache = L.attention_apply(
+            p["attn"], L.rms_norm(p["norm1"], x, cfg.norm_eps), cfg, positions,
+            window=window, mode=mode, cache=cache, cache_pos=cache_pos, dist=dist,
+        )
+        x = x + h
+        y, aux = moe_apply(p["moe"], L.rms_norm(p["norm2"], x, cfg.norm_eps), cfg, dist)
+        return x + y, new_cache, aux
+
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, length: int, window: int):
+        c = min(length, window) if window > 0 else length
+        return L.init_kv_cache(cfg, batch, c)
+
+    @staticmethod
+    def cache_axes(cfg: ModelConfig, window: int):
+        return L.kv_cache_axes(cfg)

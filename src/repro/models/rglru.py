@@ -1,0 +1,138 @@
+"""RecurrentGemma / Griffin recurrent block (arXiv:2402.19427).
+
+The RG-LRU is an elementwise-gated *linear* recurrence:
+
+    r_t = sigmoid(W_a x_t + b_a)              (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)              (input gate)
+    log a_t = -c * softplus(Λ) * r_t          (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Linearity makes it a textbook `lax.associative_scan` — O(log T) depth on
+TPU for train/prefill (the sub-quadratic path that makes long_500k viable)
+and an O(1) step for decode. The block is Griffin's recurrent block: dual
+up-projection branches (gate + recurrence), depthwise causal conv-4 on the
+recurrence branch, RG-LRU, GeLU-gated merge, down-projection, followed by
+the standard gated-MLP sublayer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import ParamDef
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.xlstm import causal_conv, conv_param_defs, conv_step
+
+C_SCALE = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    h: jax.Array  # (B, W) recurrent state
+    conv: jax.Array  # (B, conv_width-1, W)
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rnn_width or cfg.d_model
+
+
+def rglru_scan(x: jax.Array, log_a: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + x_t via associative scan. x/log_a: (B,T,W), fp32."""
+    # Fold the initial state into step 0.
+    x = x.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(c1, c2):
+        la1, y1 = c1
+        la2, y2 = c2
+        return la1 + la2, jnp.exp(la2) * y1 + y2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, x), axis=1)
+    return h
+
+
+class RGLRUBlock:
+    @staticmethod
+    def defs(cfg: ModelConfig, window: int) -> Dict[str, Any]:
+        d, W = cfg.d_model, _width(cfg)
+        dt = jnp.dtype(cfg.dtype)
+        return {
+            "norm1": L.rms_norm_defs(d),
+            "wx": ParamDef((d, W), ("embed", "rnn_state"), dtype=dt),  # recurrence branch
+            "wy": ParamDef((d, W), ("embed", "rnn_state"), dtype=dt),  # gate branch
+            "conv": conv_param_defs(W, cfg.conv_kernel),
+            "wa": ParamDef((W, W), ("rnn_state", None), scale=0.5, dtype=jnp.float32),
+            "ba": ParamDef((W,), (None,), init="zeros", dtype=jnp.float32),
+            "wg": ParamDef((W, W), ("rnn_state", None), scale=0.5, dtype=jnp.float32),
+            "bg": ParamDef((W,), (None,), init="zeros", dtype=jnp.float32),
+            # Λ init so that a = sigmoid(Λ)^c is spread in (0.9, 0.999)
+            "lam": ParamDef(
+                (W,), (None,),
+                init=lambda key, shape, dtype: jnp.log(
+                    jnp.expm1(
+                        -jnp.log(
+                            jax.random.uniform(key, shape, jnp.float32, 0.9, 0.999)
+                        ) / C_SCALE
+                    )
+                ).astype(dtype),
+                dtype=jnp.float32,
+            ),
+            "wout": ParamDef((W, d), ("rnn_state", "embed"), dtype=dt),
+            "norm2": L.rms_norm_defs(d),
+            "mlp": L.mlp_param_defs(cfg),
+        }
+
+    @staticmethod
+    def apply(p, x, positions, cfg, *, window, mode, cache, cache_pos, dist):
+        B, T, d = x.shape
+        W = _width(cfg)
+        xn = L.rms_norm(p["norm1"], x, cfg.norm_eps)
+        branch_x = jnp.einsum("btd,dw->btw", xn, p["wx"])
+        branch_y = jax.nn.gelu(jnp.einsum("btd,dw->btw", xn, p["wy"]))
+
+        if mode == "decode":
+            conv_buf, u = conv_step(p["conv"], cache.conv, branch_x)
+        else:
+            u = causal_conv(p["conv"], branch_x)
+            conv_buf = None
+
+        u32 = u.astype(jnp.float32)
+        r = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", u32, p["wa"]) + p["ba"])
+        i = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", u32, p["wg"]) + p["bg"])
+        log_a = -C_SCALE * jax.nn.softplus(p["lam"]) * r  # (B,T,W), <= 0
+        gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-8)) * (i * u32)
+
+        h0 = cache.h if cache is not None else jnp.zeros((B, W), jnp.float32)
+        if mode == "decode":  # single step
+            h = jnp.exp(log_a[:, 0]) * h0 + gated[:, 0]
+            hs = h[:, None]
+            h_last = h
+        else:
+            hs = rglru_scan(gated, log_a, h0)
+            h_last = hs[:, -1]
+
+        y = jnp.einsum("btw,wd->btd", (hs.astype(x.dtype) * branch_y), p["wout"])
+        x = x + y
+        x = x + L.mlp_apply(p["mlp"], L.rms_norm(p["norm2"], x, cfg.norm_eps),
+                            act=jax.nn.gelu)
+
+        new_cache = None
+        if mode in ("prefill", "decode"):
+            if conv_buf is None:
+                wdt = cfg.conv_kernel - 1
+                conv_buf = jnp.pad(branch_x, ((0, 0), (max(0, wdt - T), 0), (0, 0)))[:, -wdt:]
+            new_cache = RGLRUCache(h_last, conv_buf)
+        return x, new_cache, jnp.float32(0.0)
+
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, length: int, window: int):
+        W = _width(cfg)
+        return RGLRUCache(
+            jnp.zeros((batch, W), jnp.float32),
+            jnp.zeros((batch, cfg.conv_kernel - 1, W), jnp.dtype(cfg.dtype)),
+        )
+
+    @staticmethod
+    def cache_axes(cfg: ModelConfig, window: int):
+        return RGLRUCache(("batch", "rnn_state"), ("batch", None, "rnn_state"))

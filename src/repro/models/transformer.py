@@ -1,0 +1,330 @@
+"""Generic block-pattern transformer stack.
+
+One stack serves all 10 assigned architectures: the per-layer block kind
+comes from ``cfg.pattern`` (a cycle of 'attn' | 'local' | 'moe' | 'mlstm' |
+'slstm' | 'rglru' | 'hstu'). Homogeneous-cycle stacks are *scanned* over
+whole cycles (`lax.scan`, MaxText-style: one traced cycle, params stacked on
+a leading "stack" axis) with an unstacked tail when ``num_layers`` is not a
+cycle multiple. This keeps lowering time and HLO size flat in depth — an
+80-layer qwen2-72b lowers as one scanned block.
+
+Three modes share the same block code:
+  * ``train``   — full self-attention / parallel scans, no caches.
+  * ``prefill`` — like train but *returns* per-layer caches (KV / recurrent
+                  state) for subsequent decode.
+  * ``decode``  — one new token against a supplied cache (`serve_step`).
+
+Block protocol (see attn block below and moe/xlstm/rglru/hstu modules):
+    defs(cfg, window)                         -> pytree[ParamDef]
+    apply(p, x, positions, cfg, *, window, mode, cache, cache_pos, dist)
+                                              -> (y, new_cache_or_None, aux)
+      where aux is a scalar auxiliary loss (MoE load-balance; 0.0 elsewhere)
+      accumulated across layers by `apply_stack`.
+    init_cache(cfg, batch, length, window)    -> cache pytree (zeros)
+    cache_axes(cfg, window)                   -> logical-axis pytree for cache
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.dist import DistContext
+from repro.common.params import ParamDef
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+# ---------------------------------------------------------------------------
+# Attention block ('attn' full, 'local' sliding-window)
+# ---------------------------------------------------------------------------
+
+
+class AttnBlock:
+    @staticmethod
+    def defs(cfg: ModelConfig, window: int) -> Dict[str, Any]:
+        return {
+            "norm1": L.rms_norm_defs(cfg.d_model),
+            "attn": L.attention_param_defs(cfg),
+            "norm2": L.rms_norm_defs(cfg.d_model),
+            "mlp": L.mlp_param_defs(cfg),
+        }
+
+    @staticmethod
+    def apply(p, x, positions, cfg, *, window, mode, cache, cache_pos, dist):
+        h, new_cache = L.attention_apply(
+            p["attn"],
+            L.rms_norm(p["norm1"], x, cfg.norm_eps),
+            cfg,
+            positions,
+            window=window,
+            mode=mode,
+            cache=cache,
+            cache_pos=cache_pos,
+            dist=dist,
+        )
+        x = x + h
+        x = x + L.mlp_apply(p["mlp"], L.rms_norm(p["norm2"], x, cfg.norm_eps))
+        return x, new_cache, jnp.float32(0.0)
+
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, length: int, window: int):
+        c = min(length, window) if window > 0 else length
+        return L.init_kv_cache(cfg, batch, c)
+
+    @staticmethod
+    def cache_axes(cfg: ModelConfig, window: int):
+        return L.kv_cache_axes(cfg)
+
+
+BLOCK_KINDS: Dict[str, Any] = {"attn": AttnBlock, "local": AttnBlock}
+
+
+def _register_builtin_blocks():
+    # Late imports: these modules import transformer-free layers only.
+    from repro.models.moe import MoEBlock
+    from repro.models.xlstm import MLSTMBlock, SLSTMBlock
+    from repro.models.rglru import RGLRUBlock
+    from repro.models.hstu import HSTUBlock
+
+    BLOCK_KINDS.update(
+        moe=MoEBlock, mlstm=MLSTMBlock, slstm=SLSTMBlock,
+        rglru=RGLRUBlock, hstu=HSTUBlock,
+    )
+
+
+def block_cls(kind: str):
+    if kind not in BLOCK_KINDS:
+        _register_builtin_blocks()
+    return BLOCK_KINDS[kind]
+
+
+def _window_for(cfg: ModelConfig, kind: str) -> int:
+    return cfg.window_size if kind == "local" else 0
+
+
+# ---------------------------------------------------------------------------
+# Stack structure: scanned cycles + tail
+# ---------------------------------------------------------------------------
+
+
+def stack_split(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    """(cycle, n_cycles, tail_kinds). Scanning applies when n_cycles > 1."""
+    cycle = cfg.block_pattern or ("attn",)
+    if not cfg.scan_layers:
+        return tuple(cfg.pattern), 1, ()
+    n_cycles = cfg.num_layers // len(cycle)
+    tail = cfg.pattern[n_cycles * len(cycle):]
+    return tuple(cycle), n_cycles, tuple(tail)
+
+
+def _stack_defs(defs, n: int):
+    """Prepend a (n,)-sized 'stack' axis to every ParamDef in a tree."""
+    return jax.tree_util.tree_map(
+        lambda d: ParamDef((n,) + d.shape, ("stack",) + d.logical_axes,
+                           init=d.init, scale=d.scale, dtype=d.dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def stack_param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    cycle, n_cycles, tail = stack_split(cfg)
+    out: Dict[str, Any] = {}
+    if n_cycles > 1:
+        out["scan"] = [
+            _stack_defs(block_cls(k).defs(cfg, _window_for(cfg, k)), n_cycles)
+            for k in cycle
+        ]
+        out["tail"] = [block_cls(k).defs(cfg, _window_for(cfg, k)) for k in tail]
+    else:
+        out["scan"] = []
+        out["tail"] = [block_cls(k).defs(cfg, _window_for(cfg, k)) for k in cfg.pattern]
+    return out
+
+
+def init_stack_caches(cfg: ModelConfig, batch: int, length: int):
+    """Zero caches mirroring the scan/tail structure (decode inputs)."""
+    cycle, n_cycles, tail = stack_split(cfg)
+    if n_cycles > 1:
+        scan = [
+            jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (n_cycles,) + x.shape),
+                block_cls(k).init_cache(cfg, batch, length, _window_for(cfg, k)),
+            )
+            for k in cycle
+        ]
+        tail_caches = [
+            block_cls(k).init_cache(cfg, batch, length, _window_for(cfg, k))
+            for k in tail
+        ]
+    else:
+        scan = []
+        tail_caches = [
+            block_cls(k).init_cache(cfg, batch, length, _window_for(cfg, k))
+            for k in cfg.pattern
+        ]
+    return {"scan": scan, "tail": tail_caches}
+
+
+def stack_cache_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    """Logical-axis tuples mirroring init_stack_caches (leading 'stack' on scan)."""
+    cycle, n_cycles, tail = stack_split(cfg)
+
+    def leafify(axes_tree, stacked: bool):
+        return jax.tree_util.tree_map(
+            lambda ax: (("stack",) + tuple(ax)) if stacked else tuple(ax),
+            axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                a is None or isinstance(a, str) for a in x
+            ),
+        )
+
+    if n_cycles > 1:
+        return {
+            "scan": [leafify(block_cls(k).cache_axes(cfg, _window_for(cfg, k)), True)
+                     for k in cycle],
+            "tail": [leafify(block_cls(k).cache_axes(cfg, _window_for(cfg, k)), False)
+                     for k in tail],
+        }
+    return {
+        "scan": [],
+        "tail": [leafify(block_cls(k).cache_axes(cfg, _window_for(cfg, k)), False)
+                 for k in cfg.pattern],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Stack application
+# ---------------------------------------------------------------------------
+
+
+def apply_stack(
+    params: Dict[str, Any],
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mode: str = "train",
+    caches: Optional[Dict[str, Any]] = None,
+    cache_pos: Optional[jax.Array] = None,
+    dist: Optional[DistContext] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    cycle, n_cycles, tail = stack_split(cfg)
+    want_caches = mode in ("prefill", "decode")
+    new_caches: Dict[str, Any] = {"scan": [], "tail": []}
+    aux_total = jnp.float32(0.0)
+
+    def one_block(kind, p, x, cache):
+        if dist is not None:
+            # pin the residual stream's sharding so batch sharding survives
+            # the backward pass (see DistContext.act_spec)
+            x = dist.constrain_acts(x)
+        fn = functools.partial(
+            block_cls(kind).apply,
+            positions=positions,
+            cfg=cfg,
+            window=_window_for(cfg, kind),
+            mode=mode,
+            cache_pos=cache_pos,
+            dist=dist,
+        )
+        if cfg.remat and mode == "train":
+            return jax.checkpoint(
+                lambda p_, x_, c_: fn(p_, x_, cache=c_),
+                policy=jax.checkpoint_policies.nothing_saveable,
+            )(p, x, cache)
+        return fn(p, x, cache=cache)
+
+    if n_cycles > 1:
+        def cycle_body(carry, xs):
+            x, aux = carry
+            p_list, c_list = xs
+            ys = []
+            for kind, p, c in zip(cycle, p_list, c_list):
+                x, nc, a = one_block(kind, p, x, c)
+                aux = aux + a
+                ys.append(nc)
+            return (x, aux), (tuple(ys) if want_caches else None)
+
+        cache_xs = (
+            tuple(caches["scan"]) if (caches is not None and caches["scan"])
+            else tuple(None for _ in cycle)
+        )
+        (x, aux_total), ys = jax.lax.scan(
+            cycle_body, (x, aux_total), (tuple(params["scan"]), cache_xs)
+        )
+        if want_caches:
+            new_caches["scan"] = list(ys)
+
+    tail_kinds = tail if n_cycles > 1 else cfg.pattern
+    for i, kind in enumerate(tail_kinds):
+        c = caches["tail"][i] if caches is not None else None
+        x, nc, a = one_block(kind, params["tail"][i], x, c)
+        aux_total = aux_total + a
+        if want_caches:
+            new_caches["tail"].append(nc)
+
+    return x, (new_caches if want_caches else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Full language/sequence model: embed -> stack -> norm -> head
+# ---------------------------------------------------------------------------
+
+
+def lm_param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    defs = {
+        "embed": L.embed_param_defs(cfg),
+        "stack": stack_param_defs(cfg),
+        "final_norm": L.rms_norm_defs(cfg.d_model),
+    }
+    return defs
+
+
+def lm_apply(
+    params: Dict[str, Any],
+    batch: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    *,
+    mode: str = "train",
+    caches=None,
+    cache_pos=None,
+    dist: Optional[DistContext] = None,
+    return_hidden: bool = False,
+):
+    """batch: {'tokens': (B,S) int32} and/or modality embeddings.
+
+    vlm  : {'tokens': (B, S-P), 'patches': (B, P, d)} — patches prepended.
+    audio: {'frames': (B, S, d)} — encoder input is the frame embeddings.
+    Returns (logits, new_caches, aux). Decode mode: S == 1.
+    """
+    if cfg.frontend == "audio_frames":
+        x = batch["frames"].astype(jnp.dtype(cfg.dtype))
+    elif cfg.frontend == "vision_patches" and "patches" in batch:
+        tok = L.embed_tokens(params["embed"], batch["tokens"])
+        x = jnp.concatenate([batch["patches"].astype(tok.dtype), tok], axis=1)
+    else:
+        x = L.embed_tokens(params["embed"], batch["tokens"])
+
+    B, S = x.shape[:2]
+    if mode == "decode":
+        positions = jnp.broadcast_to(
+            cache_pos.astype(jnp.int32).reshape(-1, 1)
+            if hasattr(cache_pos, "reshape") else jnp.int32(cache_pos), (B, S)
+        )
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    x, new_caches, aux = apply_stack(
+        params["stack"], x, positions, cfg,
+        mode=mode, caches=caches, cache_pos=cache_pos, dist=dist,
+    )
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        # caller fuses the head matmul into a streaming loss (chunked CE)
+        return x, new_caches, aux
+    logits = L.logits_out(params["embed"], x)
+    return logits, new_caches, aux

@@ -1,0 +1,400 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly recurrent).
+
+mLSTM runs in *chunkwise-parallel* form — the TPU-idiomatic middle ground
+between the quadratic parallel form (O(T^2), fine for short T) and the
+step recurrence (O(T) sequential): intra-chunk interactions use a masked
+quadratic einsum in VMEM-friendly tiles, inter-chunk state is carried
+through a `lax.scan`. All gate algebra is done in log space with the
+paper's max-stabilizer `m`, so exp() never overflows. Decode is the same
+code with T == chunk == 1.
+
+sLSTM has a genuine nonlinear recurrence (h_{t-1} feeds the gates through
+block-diagonal per-head recurrent matrices), so training scans over time.
+
+Sharding: inner projections carry the 'rnn_state' logical axis; the mLSTM
+matrix memory (B, H, hd, hd) shards its key dim over 'rnn_state' → `model`
+(no assigned xLSTM config has H divisible by the 16-way axis, the state dim
+is what distributes).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import ParamDef
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (width 4) — shared by both blocks
+# ---------------------------------------------------------------------------
+
+
+def conv_param_defs(channels: int, width: int) -> Dict[str, ParamDef]:
+    return {
+        "w": ParamDef((width, channels), (None, "rnn_state"), scale=1.0),
+        "b": ParamDef((channels,), ("rnn_state",), init="zeros"),
+    }
+
+
+def causal_conv(p, x: jax.Array) -> jax.Array:
+    """x: (B, T, C) -> (B, T, C), left-padded depthwise conv."""
+    width = p["w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * p["w"][i].astype(x.dtype)
+        for i in range(width)
+    )
+    return out + p["b"].astype(x.dtype)
+
+
+def conv_step(p, buf: jax.Array, x1: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Decode: buf (B, width-1, C) holds previous inputs; x1 (B, 1, C)."""
+    window = jnp.concatenate([buf, x1], axis=1)  # (B, width, C)
+    out = jnp.einsum("bwc,wc->bc", window, p["w"].astype(x1.dtype)) + p["b"].astype(x1.dtype)
+    return window[:, 1:], out[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel, stabilized
+# ---------------------------------------------------------------------------
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array  # (B, H, hd_k, hd_v) matrix memory
+    n: jax.Array  # (B, H, hd_k) normalizer
+    m: jax.Array  # (B, H) log-space stabilizer
+
+
+def mlstm_init_state(batch: int, H: int, hd: int) -> MLSTMState:
+    return MLSTMState(
+        jnp.zeros((batch, H, hd, hd), jnp.float32),
+        jnp.zeros((batch, H, hd), jnp.float32),
+        jnp.zeros((batch, H), jnp.float32),
+    )
+
+
+def mlstm_chunkwise(
+    q: jax.Array,  # (B, T, H, hd), already scaled by hd^-0.5
+    k: jax.Array,
+    v: jax.Array,
+    ilog: jax.Array,  # (B, T, H) log input gate (pre-exp)
+    flog: jax.Array,  # (B, T, H) log forget gate (log-sigmoid applied)
+    state: MLSTMState,
+    chunk: int,
+) -> Tuple[jax.Array, MLSTMState]:
+    B, T, H, hd = q.shape
+    W = min(chunk, T)
+    n_chunks = -(-T // W)
+    pad = n_chunks * W - T
+    if pad:
+        zq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, zq), jnp.pad(k, zq), jnp.pad(v, zq)
+        # padded steps: forget gate 1 (log 0) keeps state; input gate -inf-ish
+        ilog = jnp.pad(ilog, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        flog = jnp.pad(flog, ((0, 0), (0, pad), (0, 0)))
+
+    def reshape_c(x):
+        return x.reshape((B, n_chunks, W) + x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = reshape_c(q), reshape_c(k), reshape_c(v)
+    ic, fc = reshape_c(ilog.astype(jnp.float32)), reshape_c(flog.astype(jnp.float32))
+
+    def chunk_body(st: MLSTMState, xs):
+        qb, kb, vb, ib, fb = xs  # (B, W, H, hd) / (B, W, H)
+        b = jnp.cumsum(fb, axis=1)  # inclusive sum of log-forgets
+        btot = b[:, -1]  # (B, H)
+        # ---- stabilizer
+        causal = jnp.tril(jnp.ones((W, W), bool))
+        D = jnp.where(
+            causal[None, :, :, None],
+            b[:, :, None, :] - b[:, None, :, :] + ib[:, None, :, :],
+            -jnp.inf,
+        )  # (B, t, s, H)
+        m_intra = jnp.max(D, axis=2)  # (B, W, H)
+        m_inter = b + st.m[:, None, :]
+        m_t = jnp.maximum(m_intra, m_inter)
+        m_t = jnp.where(jnp.isfinite(m_t), m_t, 0.0)
+        # ---- intra-chunk quadratic part
+        scores = jnp.einsum(
+            "bthd,bshd->btsh", qb.astype(jnp.float32), kb.astype(jnp.float32)
+        )
+        wgt = jnp.where(
+            causal[None, :, :, None], jnp.exp(D - m_t[:, :, None, :]), 0.0
+        )
+        cw = scores * wgt
+        num = jnp.einsum("btsh,bshd->bthd", cw, vb.astype(jnp.float32))
+        den = jnp.sum(cw, axis=2)  # (B, W, H)
+        # ---- inter-chunk contribution from carried state
+        coef = jnp.exp(m_inter - m_t)  # (B, W, H)
+        num = num + coef[..., None] * jnp.einsum(
+            "bthk,bhkv->bthv", qb.astype(jnp.float32), st.C
+        )
+        den = den + coef * jnp.einsum("bthk,bhk->bth", qb.astype(jnp.float32), st.n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # ---- state update to chunk end
+        kdecay = btot[:, None] - b + ib  # (B, W, H): i_s + sum_{r>s} logf_r
+        m_new = jnp.maximum(btot + st.m, jnp.max(kdecay, axis=1))
+        m_new = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        kscale = jnp.exp(kdecay - m_new[:, None])
+        C_new = jnp.exp(btot + st.m - m_new)[:, :, None, None] * st.C + jnp.einsum(
+            "bshk,bshv->bhkv",
+            kb.astype(jnp.float32) * kscale[..., None],
+            vb.astype(jnp.float32),
+        )
+        n_new = jnp.exp(btot + st.m - m_new)[:, :, None] * st.n + jnp.einsum(
+            "bshk,bsh->bhk", kb.astype(jnp.float32), kscale
+        )
+        return MLSTMState(C_new, n_new, m_new), h
+
+    state, hs = jax.lax.scan(chunk_body, state, (qc, kc, vc, ic, fc))
+    h = hs.swapaxes(0, 1).reshape(B, n_chunks * W, H, hd)
+    if pad:
+        h = h[:, :T]
+    return h.astype(q.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (pre-up-projection, xLSTM §"mLSTM block")
+# ---------------------------------------------------------------------------
+
+
+class MLSTMCache(NamedTuple):
+    state: MLSTMState
+    conv: jax.Array  # (B, conv_width-1, inner)
+
+
+def _inner_dim(cfg: ModelConfig) -> int:
+    return cfg.rnn_width or 2 * cfg.d_model
+
+
+def _xlstm_heads(cfg: ModelConfig) -> Tuple[int, int]:
+    H = cfg.num_heads
+    inner = _inner_dim(cfg)
+    return H, inner // H
+
+
+class MLSTMBlock:
+    @staticmethod
+    def defs(cfg: ModelConfig, window: int) -> Dict[str, Any]:
+        d, inner = cfg.d_model, _inner_dim(cfg)
+        H, hd = _xlstm_heads(cfg)
+        dt = jnp.dtype(cfg.dtype)
+        return {
+            "norm": L.rms_norm_defs(d),
+            "wup": ParamDef((d, 2 * inner), ("embed", "rnn_state"), dtype=dt),
+            "conv": conv_param_defs(inner, cfg.conv_kernel),
+            # block-diagonal q/k/v (one (hd, hd) block per head) — the
+            # official xLSTM "BlockLinear"; dense (inner, inner) projections
+            # would triple the block's parameter count (1.3B -> 3.6B).
+            "wq": ParamDef((H, hd, hd), (None, "rnn_head_k", None), dtype=dt),
+            "wk": ParamDef((H, hd, hd), (None, "rnn_head_k", None), dtype=dt),
+            "wv": ParamDef((H, hd, hd), (None, "rnn_head_k", None), dtype=dt),
+            "wi": ParamDef((inner, H), ("rnn_state", None), dtype=jnp.float32),
+            "bi": ParamDef((H,), (None,), init="zeros", dtype=jnp.float32),
+            "wf": ParamDef((inner, H), ("rnn_state", None), dtype=jnp.float32),
+            "bf": ParamDef(
+                (H,), (None,),
+                init=lambda key, shape, dtype: jnp.linspace(3.0, 6.0, shape[0]).astype(dtype),
+                dtype=jnp.float32,
+            ),
+            "gnorm": L.rms_norm_defs(inner),
+            "wdown": ParamDef((inner, d), ("rnn_state", "embed"), dtype=dt),
+        }
+
+    @staticmethod
+    def apply(p, x, positions, cfg, *, window, mode, cache, cache_pos, dist):
+        B, T, d = x.shape
+        H, hd = _xlstm_heads(cfg)
+        inner = _inner_dim(cfg)
+        xn = L.rms_norm(p["norm"], x, cfg.norm_eps)
+        up = jnp.einsum("btd,di->bti", xn, p["wup"])
+        c_branch, u_gate = up[..., :inner], up[..., inner:]
+
+        if mode == "decode":
+            conv_buf, cqk = conv_step(p["conv"], cache.conv, c_branch)
+        else:
+            cqk = causal_conv(p["conv"], c_branch)
+            conv_buf = None
+        cqk = jax.nn.silu(cqk)
+
+        cqk_h = cqk.reshape(B, T, H, hd)
+        cb_h = c_branch.reshape(B, T, H, hd)
+        q = jnp.einsum("bthi,hij->bthj", cqk_h, p["wq"]) * (hd**-0.5)
+        k = jnp.einsum("bthi,hij->bthj", cqk_h, p["wk"]) * (hd**-0.5)
+        v = jnp.einsum("bthi,hij->bthj", cb_h, p["wv"])
+        ilog = jnp.einsum("bti,ih->bth", cqk.astype(jnp.float32), p["wi"]) + p["bi"]
+        flog = jax.nn.log_sigmoid(
+            jnp.einsum("bti,ih->bth", cqk.astype(jnp.float32), p["wf"]) + p["bf"]
+        )
+
+        st = cache.state if cache is not None else mlstm_init_state(B, H, hd)
+        chunk = 1 if mode == "decode" else min(256, T)
+        h, st = mlstm_chunkwise(q, k, v, ilog, flog, st, chunk)
+
+        h = h.reshape(B, T, inner)
+        h = L.rms_norm(p["gnorm"], h, cfg.norm_eps) * jax.nn.silu(u_gate)
+        y = x + jnp.einsum("bti,id->btd", h, p["wdown"])
+
+        new_cache = None
+        if mode in ("prefill", "decode"):
+            if conv_buf is None:  # prefill: keep last conv_width-1 inputs
+                w = cfg.conv_kernel - 1
+                cb = jnp.pad(c_branch, ((0, 0), (max(0, w - T), 0), (0, 0)))[:, -w:]
+                conv_buf = cb
+            new_cache = MLSTMCache(st, conv_buf)
+        return y, new_cache, jnp.float32(0.0)
+
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, length: int, window: int):
+        H, hd = _xlstm_heads(cfg)
+        return MLSTMCache(
+            mlstm_init_state(batch, H, hd),
+            jnp.zeros((batch, cfg.conv_kernel - 1, _inner_dim(cfg)), jnp.dtype(cfg.dtype)),
+        )
+
+    @staticmethod
+    def cache_axes(cfg: ModelConfig, window: int):
+        return MLSTMCache(
+            MLSTMState(
+                ("batch", None, "rnn_head_k", None),
+                ("batch", None, "rnn_head_k"),
+                ("batch", None),
+            ),
+            ("batch", None, "rnn_state"),
+        )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block — scalar memory, true recurrence via lax.scan
+# ---------------------------------------------------------------------------
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, hd)
+    n: jax.Array  # (B, H, hd)
+    m: jax.Array  # (B, H, hd)
+    h: jax.Array  # (B, H, hd) previous output (feeds recurrent gates)
+
+
+class SLSTMCache(NamedTuple):
+    state: SLSTMState
+    conv: jax.Array  # (B, width-1, d)
+
+
+def _slstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    H = cfg.num_heads
+    return H, cfg.d_model // H
+
+
+class SLSTMBlock:
+    GATES = ("z", "i", "f", "o")
+
+    @staticmethod
+    def defs(cfg: ModelConfig, window: int) -> Dict[str, Any]:
+        d = cfg.d_model
+        H, hd = _slstm_dims(cfg)
+        dt = jnp.dtype(cfg.dtype)
+        f_mlp = cfg.d_ff or int(4 * d / 3 // 128 + 1) * 128
+        defs: Dict[str, Any] = {
+            "norm": L.rms_norm_defs(d),
+            "conv": conv_param_defs(d, cfg.conv_kernel),
+            "gnorm": L.rms_norm_defs(d),
+            "norm2": L.rms_norm_defs(d),
+            "mlp": {
+                "wi": ParamDef((d, f_mlp), ("embed", "mlp"), dtype=dt),
+                "wg": ParamDef((d, f_mlp), ("embed", "mlp"), dtype=dt),
+                "wo": ParamDef((f_mlp, d), ("mlp", "embed"), dtype=dt),
+            },
+        }
+        for g in SLSTMBlock.GATES:
+            defs[f"w{g}"] = ParamDef((d, H, hd), ("embed", None, None), dtype=jnp.float32)
+            defs[f"r{g}"] = ParamDef((H, hd, hd), (None, None, None), dtype=jnp.float32)
+            init = "zeros"
+            if g == "f":
+                init = lambda key, shape, dtype: jnp.full(shape, 3.0, dtype)
+            defs[f"b{g}"] = ParamDef((H, hd), (None, None), init=init, dtype=jnp.float32)
+        return defs
+
+    @staticmethod
+    def _cell_step(p, st: SLSTMState, gates_x) -> Tuple[SLSTMState, jax.Array]:
+        zx, ix, fx, ox = gates_x  # each (B, H, hd) fp32
+        rec = lambda g: jnp.einsum("bhn,hnm->bhm", st.h, p[f"r{g}"])
+        zt = jnp.tanh(zx + rec("z"))
+        it = ix + rec("i")  # log space
+        ft = jax.nn.log_sigmoid(fx + rec("f"))
+        ot = jax.nn.sigmoid(ox + rec("o"))
+        m_new = jnp.maximum(ft + st.m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + st.m - m_new)
+        c = f_p * st.c + i_p * zt
+        n = f_p * st.n + i_p
+        h = ot * c / jnp.maximum(n, 1.0)
+        return SLSTMState(c, n, m_new, h), h
+
+    @staticmethod
+    def apply(p, x, positions, cfg, *, window, mode, cache, cache_pos, dist):
+        B, T, d = x.shape
+        H, hd = _slstm_dims(cfg)
+        xn = L.rms_norm(p["norm"], x, cfg.norm_eps)
+
+        if mode == "decode":
+            conv_buf, xc = conv_step(p["conv"], cache.conv, xn)
+        else:
+            xc = causal_conv(p["conv"], xn)
+            conv_buf = None
+        xc = jax.nn.silu(xc)
+
+        # i/f gates see the conv path; z/o see the raw normed input (paper).
+        gx = {
+            g: jnp.einsum(
+                "btd,dhn->bthn",
+                (xc if g in ("i", "f") else xn).astype(jnp.float32),
+                p[f"w{g}"],
+            ) + p[f"b{g}"]
+            for g in SLSTMBlock.GATES
+        }
+
+        st = cache.state if cache is not None else SLSTMState(
+            *(jnp.zeros((B, H, hd), jnp.float32) for _ in range(4))
+        )
+        if T == 1:
+            st, h = SLSTMBlock._cell_step(p, st, tuple(gx[g][:, 0] for g in SLSTMBlock.GATES))
+            hs = h[:, None]
+        else:
+            xs = tuple(gx[g].swapaxes(0, 1) for g in SLSTMBlock.GATES)  # (T,B,H,hd)
+            st, hs = jax.lax.scan(
+                lambda s, g: SLSTMBlock._cell_step(p, s, g), st, xs
+            )
+            hs = hs.swapaxes(0, 1)  # (B,T,H,hd)
+
+        h = hs.reshape(B, T, d).astype(x.dtype)
+        x = x + L.rms_norm(p["gnorm"], h, cfg.norm_eps)
+        # post-up-projection MLP
+        xm = L.rms_norm(p["norm2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], xm)
+
+        new_cache = None
+        if mode in ("prefill", "decode"):
+            if conv_buf is None:
+                w = cfg.conv_kernel - 1
+                conv_buf = jnp.pad(xn, ((0, 0), (max(0, w - T), 0), (0, 0)))[:, -w:]
+            new_cache = SLSTMCache(st, conv_buf)
+        return x, new_cache, jnp.float32(0.0)
+
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, length: int, window: int):
+        H, hd = _slstm_dims(cfg)
+        return SLSTMCache(
+            SLSTMState(*(jnp.zeros((batch, H, hd), jnp.float32) for _ in range(4))),
+            jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_model), jnp.dtype(cfg.dtype)),
+        )
+
+    @staticmethod
+    def cache_axes(cfg: ModelConfig, window: int):
+        s = ("batch", None, None)
+        return SLSTMCache(SLSTMState(s, s, s, s), ("batch", None, "embed"))

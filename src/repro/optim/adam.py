@@ -1,0 +1,80 @@
+"""Dense Adam with fp32 master weights (paper §6.1 uses Adam; §5.2 mixed
+precision keeps the dense stack in reduced precision with full-precision
+state).
+
+Functional optax-style API without the optax dependency (offline container):
+
+    opt = Adam(lr=1e-3)
+    state = opt.init(params)               # master fp32 copy + moments
+    params, state = opt.update(grads, state, params)
+
+Params may be bf16; moments and master weights are fp32, and each update
+round-trips master -> cast to param dtype (the standard mixed-precision
+recipe; DESIGN.md §2 'fp16 -> bf16').
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array  # () int32
+    master: Any  # fp32 master weights (pytree like params)
+    mu: Any  # first moment
+    nu: Any  # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0  # global-norm clip; 0 disables
+
+    def init(self, params) -> AdamState:
+        f32 = lambda t: jax.tree.map(lambda x: x.astype(jnp.float32), t)
+        zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        return AdamState(jnp.int32(0), f32(params), zeros,
+                         jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamState, params) -> Tuple[Any, AdamState]:
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip > 0:
+            norm = global_norm(g32)
+            scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(norm, 1e-12))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        t = state.step + 1
+        bc1 = 1.0 - self.b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - self.b2 ** t.astype(jnp.float32)
+
+        def upd(g, m, v, w):
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            step = self.lr * (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if self.weight_decay:
+                step = step + self.lr * self.weight_decay * w
+            return m, v, w - step
+
+        flat_g, treedef = jax.tree.flatten(g32)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_w = treedef.flatten_up_to(state.master)
+        out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+        mu = treedef.unflatten([o[0] for o in out])
+        nu = treedef.unflatten([o[1] for o in out])
+        master = treedef.unflatten([o[2] for o in out])
+        new_params = jax.tree.map(
+            lambda w, p: w.astype(p.dtype), master, params
+        )
+        return new_params, AdamState(t, master, mu, nu)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))

@@ -1,0 +1,75 @@
+"""Rowwise Adam over *touched* embedding rows (paper §5.2 'Gradient
+Accumulation': "we avoid full parameter updates for sparse embeddings,
+instead selectively updating only activated parts").
+
+Rowwise = one (mu, nu) scalar pair per embedding *row* (TorchRec's
+ROWWISE_ADAGRAD analogue for Adam): optimizer state is O(rows), not
+O(rows x dim) — the memory trick industrial systems use for TB-scale tables.
+
+The update consumes the deduplicated (unique row, summed grad) pairs emitted
+by `core/grad_accum.py`: only those rows' moments and weights are touched,
+via scatter ops; everything else is left untouched at zero cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RowwiseAdamState(NamedTuple):
+    step: jax.Array  # () int32
+    mu: jax.Array  # (rows,) fp32 — rowwise first moment (mean over dim)
+    nu: jax.Array  # (rows,) fp32 — rowwise second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class RowwiseAdam:
+    lr: float = 1e-2
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+    def init(self, num_rows: int) -> RowwiseAdamState:
+        z = jnp.zeros((num_rows,), jnp.float32)
+        return RowwiseAdamState(jnp.int32(0), z, jnp.copy(z))
+
+    def update(
+        self,
+        emb: jax.Array,  # (rows, d) table (any float dtype)
+        state: RowwiseAdamState,
+        rows: jax.Array,  # (n,) int32 unique touched rows (-1 = padding)
+        row_grads: jax.Array,  # (n, d) fp32 summed gradient per touched row
+    ) -> Tuple[jax.Array, RowwiseAdamState]:
+        valid = rows >= 0
+        safe = jnp.where(valid, rows, 0)
+        g = jnp.where(valid[:, None], row_grads.astype(jnp.float32), 0.0)
+
+        t = state.step + 1
+        bc1 = 1.0 - self.b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - self.b2 ** t.astype(jnp.float32)
+
+        g2 = jnp.mean(g * g, axis=-1)  # rowwise second-moment signal
+        mu_rows = jnp.where(valid, state.mu[safe], 0.0)
+        nu_rows = jnp.where(valid, state.nu[safe], 0.0)
+        mu_new = self.b1 * mu_rows + (1 - self.b1) * jnp.mean(g, axis=-1)
+        nu_new = self.b2 * nu_rows + (1 - self.b2) * g2
+
+        denom = jnp.sqrt(nu_new / bc2) + self.eps  # (n,)
+        # Direction uses the full per-dim gradient; scale is rowwise.
+        step_rows = self.lr * (
+            (self.b1 * mu_rows[:, None] + (1 - self.b1) * g) / bc1
+        ) / denom[:, None]
+
+        old = jnp.where(valid[:, None], emb[safe].astype(jnp.float32), 0.0)
+        new_rows = (old - step_rows).astype(emb.dtype)
+        emb = emb.at[jnp.where(valid, safe, emb.shape[0])].set(new_rows, mode="drop")
+        mu = state.mu.at[jnp.where(valid, safe, state.mu.shape[0])].set(
+            mu_new, mode="drop"
+        )
+        nu = state.nu.at[jnp.where(valid, safe, state.nu.shape[0])].set(
+            nu_new, mode="drop"
+        )
+        return emb, RowwiseAdamState(t, mu, nu)

@@ -1,0 +1,90 @@
+"""Losses.
+
+Every loss returns (loss_sum, weight) — the *sum* over valid positions plus
+the count — rather than a mean. Dynamic sequence balancing gives devices
+different batch sizes, so per-device means would bias the gradient; dividing
+a globally-summed loss by the globally-summed weight implements the paper's
+batch-size-weighted gradient average exactly (§5.1; see weighted_sync.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def next_token_ce(
+    logits: jax.Array,  # (B, S, V) fp32
+    tokens: jax.Array,  # (B, S) int32
+    mask: Optional[jax.Array] = None,  # (B, S) bool — valid positions
+) -> Tuple[jax.Array, jax.Array]:
+    """Shifted cross entropy: position t predicts token t+1."""
+    B, S, V = logits.shape
+    z = logits[:, :-1].astype(jnp.float32)
+    y = tokens[:, 1:]
+    m = jnp.ones((B, S - 1), jnp.float32)
+    if mask is not None:
+        m = (mask[:, :-1] & mask[:, 1:]).astype(jnp.float32)
+    logz = jax.nn.logsumexp(z, axis=-1)
+    gold = jnp.take_along_axis(z, y[..., None], axis=-1)[..., 0]
+    ce = (logz - gold) * m
+    return jnp.sum(ce), jnp.sum(m)
+
+
+def chunked_next_token_ce(
+    hidden: jax.Array,  # (B, S, d) final hidden states (pre-head)
+    head: jax.Array,  # (d, V) output projection
+    tokens: jax.Array,  # (B, S) int32
+    mask: Optional[jax.Array] = None,
+    chunk: int = 512,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused head-matmul + CE over sequence chunks — never materializes the
+    full (B, S, V) logits tensor (§Perf hillclimb H3: at vocab 152k the fp32
+    logits dominate train-step memory; streaming chunks of `chunk` positions
+    caps the live logits at B × chunk × V).
+
+    Forward-equivalent to `next_token_ce(hidden @ head, tokens, mask)`.
+    """
+    B, S, d = hidden.shape
+    z_h = hidden[:, :-1]
+    y = tokens[:, 1:]
+    m = jnp.ones((B, S - 1), jnp.float32)
+    if mask is not None:
+        m = (mask[:, :-1] & mask[:, 1:]).astype(jnp.float32)
+    n = S - 1
+    nc = -(-n // chunk)
+    pad = nc * chunk - n
+    if pad:
+        z_h = jnp.pad(z_h, ((0, 0), (0, pad), (0, 0)))
+        y = jnp.pad(y, ((0, 0), (0, pad)))
+        m = jnp.pad(m, ((0, 0), (0, pad)))
+    z_c = z_h.reshape(B, nc, chunk, d).swapaxes(0, 1)
+    y_c = y.reshape(B, nc, chunk).swapaxes(0, 1)
+    m_c = m.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    def body(carry, blk):
+        tot, cnt = carry
+        zb, yb, mb = blk
+        logits = jnp.einsum("bcd,dv->bcv", zb, head,
+                            preferred_element_type=jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yb[..., None], axis=-1)[..., 0]
+        return (tot + jnp.sum((logz - gold) * mb), cnt + jnp.sum(mb)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (z_c, y_c, m_c))
+    return tot, cnt
+
+
+def multi_task_bce(
+    logits: jax.Array,  # (B, S, T)
+    labels: jax.Array,  # (B, S, T) in {0,1}
+    mask: jax.Array,  # (B, S)
+) -> Tuple[jax.Array, jax.Array]:
+    """Masked sigmoid CE summed over tasks (GRM CTR/CTCVR, §2)."""
+    z = logits.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    ce = jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    m = mask[..., None].astype(jnp.float32)
+    return jnp.sum(ce * m), jnp.sum(m)

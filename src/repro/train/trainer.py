@@ -1,0 +1,306 @@
+"""Step builders: train / prefill / decode for every assigned architecture.
+
+The trainer expresses the paper's hybrid strategy in pjit terms:
+
+* batch axes sharded over ('pod','data') — data parallelism for the dense
+  model (§3), with loss computed as global-sum / global-weight so dynamic
+  per-device batch sizes stay unbiased (§5.1 weighted sync — see
+  weighted_sync.py for the algebra);
+* parameters sharded by their logical axes through `LogicalRules` — the
+  paper-faithful configuration replicates the dense stack
+  (PAPER_FAITHFUL_RULES); the production configs add tensor parallelism over
+  the same `model` axis that carries the sparse tables (DESIGN.md §2.1);
+* optional gradient accumulation (§5.2) via a lax.scan over micro-batches.
+
+`input_specs` builds ShapeDtypeStruct stand-ins for every (arch × input
+shape) — the dry-run's no-allocation inputs (shannon/kernels pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple  # noqa: F401
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.dist import DistContext
+from repro.common.params import (
+    ParamDef,
+    fsdp_specs,
+    init_params,
+    partition_specs,
+    shape_dtype_tree,
+)
+from repro.common.sharding import DEFAULT_RULES, LogicalRules, logical_to_mesh_spec
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import layers as L
+from repro.models.transformer import (
+    init_stack_caches,
+    lm_apply,
+    lm_param_defs,
+    stack_cache_axes,
+)
+from repro.optim.adam import Adam, AdamState, global_norm
+from repro.train.loss import chunked_next_token_ce, multi_task_bce, next_token_ce
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+AUX_LOSS_WEIGHT = 0.01  # MoE load-balance loss coefficient
+
+
+def batch_struct(cfg: ModelConfig, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct inputs for one (arch, input-shape) pair.
+
+    train  : full (B, S) token grid (+ modality embeddings, + mask).
+    prefill: as train minus labels.
+    decode : ONE new token per sequence (B, 1) — the cache lives in the step's
+             carried state, not the batch.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    f32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.float32)
+    b8 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.bool_)
+
+    if shape.kind == "decode":
+        return {"tokens": i32((B, 1))}
+
+    batch: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.frontend == "audio_frames":
+        batch["frames"] = f32((B, S, cfg.d_model))  # stubbed conv-codec output
+        if shape.kind == "train":
+            batch["targets"] = i32((B, S))  # masked-unit cluster labels
+    elif cfg.frontend == "vision_patches":
+        Ptok = cfg.frontend_tokens
+        batch["patches"] = f32((B, Ptok, cfg.d_model))  # stubbed ViT output
+        batch["tokens"] = i32((B, S - Ptok))
+    else:
+        batch["tokens"] = i32((B, S))
+    if shape.kind == "train":
+        batch["mask"] = b8((B, S))
+    return batch
+
+
+def batch_partition_spec(batch: Dict[str, Any], rules: LogicalRules) -> Dict[str, P]:
+    bspec = logical_to_mesh_spec(("batch",), rules)
+    out = {}
+    for k, v in batch.items():
+        out[k] = logical_to_mesh_spec(("batch",) + (None,) * (len(v.shape) - 1), rules)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def _lm_loss(
+    params, batch, cfg: ModelConfig, dist, chunked_ce: bool = False
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    if chunked_ce and not cfg.is_encoder_only:
+        # §Perf H3: stream the head matmul + CE over sequence chunks — the
+        # full (B, S, V) fp32 logits never exist (dominant train-step memory
+        # at 150k-class vocabularies).
+        hidden, _, aux = lm_apply(params, batch, cfg, mode="train", dist=dist,
+                                  return_hidden=True)
+        mask = batch.get("mask")
+        tokens = batch["tokens"]
+        if cfg.frontend == "vision_patches":
+            Ptok = cfg.frontend_tokens
+            hidden = hidden[:, Ptok:]
+            mask = mask[:, Ptok:] if mask is not None else None
+        head = params["embed"].get("head")
+        if head is None:
+            head = params["embed"]["tok"].T
+        loss_sum, weight = chunked_next_token_ce(hidden, head, tokens, mask)
+        loss = loss_sum / jnp.maximum(weight, 1.0) + AUX_LOSS_WEIGHT * aux
+        return loss, {"loss_sum": loss_sum, "weight": weight, "aux": aux}
+
+    logits, _, aux = lm_apply(params, batch, cfg, mode="train", dist=dist)
+    mask = batch.get("mask")
+    if cfg.is_encoder_only:
+        # Encoder (hubert): predict the (stubbed) cluster units at every frame.
+        z = logits.astype(jnp.float32)
+        y = batch["targets"]
+        logz = jax.nn.logsumexp(z, axis=-1)
+        gold = jnp.take_along_axis(z, y[..., None], axis=-1)[..., 0]
+        m = mask.astype(jnp.float32) if mask is not None else jnp.ones_like(logz)
+        loss_sum, weight = jnp.sum((logz - gold) * m), jnp.sum(m)
+    else:
+        tokens = batch["tokens"]
+        if cfg.frontend == "vision_patches":
+            # loss only over the text positions (logits include patch slots)
+            Ptok = cfg.frontend_tokens
+            logits = logits[:, Ptok:]
+            mask = mask[:, Ptok:] if mask is not None else None
+        loss_sum, weight = next_token_ce(logits, tokens, mask)
+    # Global-sum / global-weight: pjit reduces across the sharded batch, so
+    # this is the paper's batch-size-weighted gradient sync (§5.1).
+    loss = loss_sum / jnp.maximum(weight, 1.0) + AUX_LOSS_WEIGHT * aux
+    return loss, {"loss_sum": loss_sum, "weight": weight, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt: Adam,
+    dist: Optional[DistContext] = None,
+    accum_steps: int = 1,
+    chunked_ce: bool = False,
+    grad_shardings=None,
+) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    accum_steps > 1 splits the batch into micro-batches along dim 0 and
+    accumulates summed gradients before one optimizer step (§5.2 gradient
+    accumulation; dense path — the sparse path is core/grad_accum.py).
+    chunked_ce streams the head+CE over sequence chunks (§Perf H3).
+    grad_shardings (a NamedSharding tree mirroring params) constrains the
+    gradient tree so GSPMD emits reduce-scatters instead of
+    all-reduce+slice on FSDP-sharded parameters (§Perf H1 iteration 2).
+    """
+
+    def loss_fn(params, batch):
+        return _lm_loss(params, batch, cfg, dist, chunked_ce=chunked_ce)
+
+    def constrain(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                            grad_shardings)
+
+    def train_step(params, opt_state: AdamState, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            grads = constrain(grads)
+        else:
+            # Micro-batch layout: (B,) -> (B/accum, accum); column i is one
+            # micro-batch *spread across all data shards* (a straight leading
+            # slice would concentrate each micro-batch on one device).
+            def micro(i, carry):
+                gsum, lsum, wsum = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_index_in_dim(
+                        x.reshape((x.shape[0] // accum_steps, accum_steps) + x.shape[1:]),
+                        i, axis=1, keepdims=False,
+                    ),
+                    batch,
+                )
+                # micro-loss keeps sum semantics: scale by micro weight later
+                def sum_loss(p):
+                    l, m = loss_fn(p, mb)
+                    return l * m["weight"], m
+                (_, m), g = jax.value_and_grad(sum_loss, has_aux=True)(params)
+                gsum = jax.tree.map(jnp.add, gsum, constrain(g))
+                return gsum, lsum + m["loss_sum"], wsum + m["weight"]
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, lsum, wsum = jax.lax.fori_loop(
+                0, accum_steps, micro, (zeros, jnp.float32(0), jnp.float32(0))
+            )
+            grads = jax.tree.map(lambda g: g / jnp.maximum(wsum, 1.0), gsum)
+            loss = lsum / jnp.maximum(wsum, 1.0)
+            metrics = {"loss_sum": lsum, "weight": wsum, "aux": jnp.float32(0)}
+
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, grad_norm=global_norm(grads))
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, dist: Optional[DistContext] = None) -> Callable:
+    """(params, batch) -> (logits_last, caches)."""
+
+    def prefill_step(params, batch):
+        logits, caches, _ = lm_apply(params, batch, cfg, mode="prefill", dist=dist)
+        return logits[:, -1:], caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, dist: Optional[DistContext] = None) -> Callable:
+    """serve_step: ONE new token against a seq_len KV/recurrent cache.
+
+    (params, caches, tokens (B,1), cache_pos ()) -> (logits (B,1,V), caches).
+    """
+
+    def decode_step(params, caches, tokens, cache_pos):
+        logits, new_caches, _ = lm_apply(
+            params, {"tokens": tokens}, cfg,
+            mode="decode", caches=caches, cache_pos=cache_pos, dist=dist,
+        )
+        return logits, new_caches
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers (used by dryrun + examples)
+# ---------------------------------------------------------------------------
+
+
+def param_specs(
+    cfg: ModelConfig,
+    rules: LogicalRules,
+    *,
+    fsdp: bool = False,
+    data_axes: Tuple[str, ...] = ("data",),
+    data_size: int = 16,
+    axis_sizes=None,
+):
+    """Parameter PartitionSpecs. fsdp=True additionally shards every large
+    tensor over the data axes (ZeRO-3; DESIGN.md §2.1 — required for archs
+    whose dense stack cannot replicate on one chip)."""
+    defs = lm_param_defs(cfg)
+    if fsdp:
+        return fsdp_specs(defs, rules, data_axes=data_axes, data_size=data_size,
+                          axis_sizes=axis_sizes)
+    return partition_specs(defs, rules)
+
+
+def opt_state_specs(pspecs) -> AdamState:
+    """Adam state shards like the params it mirrors."""
+    return AdamState(P(), pspecs, pspecs, pspecs)
+
+
+def cache_specs(cfg: ModelConfig, rules: LogicalRules):
+    axes = stack_cache_axes(cfg)
+    is_axes_leaf = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x
+    )
+    return jax.tree_util.tree_map(
+        lambda ax: logical_to_mesh_spec(ax, rules), axes, is_leaf=is_axes_leaf
+    )
+
+
+def param_structs(cfg: ModelConfig):
+    return shape_dtype_tree(lm_param_defs(cfg))
+
+
+def opt_state_structs(cfg: ModelConfig) -> AdamState:
+    pd = param_structs(cfg)
+    f32 = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), pd)
+    return AdamState(
+        jax.ShapeDtypeStruct((), jnp.int32), f32, f32,
+        jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), pd),
+    )
+
+
+def cache_structs(cfg: ModelConfig, batch: int, length: int):
+    caches = jax.eval_shape(lambda: init_stack_caches(cfg, batch, length))
+    return caches
+
+
+def init_all(cfg: ModelConfig, key: jax.Array, opt: Adam):
+    params = init_params(key, lm_param_defs(cfg))
+    return params, opt.init(params)

@@ -1,0 +1,75 @@
+"""Batch-size-weighted gradient synchronization (paper §5.1).
+
+With dynamic sequence batching every device holds a different number of
+samples, so a plain All-Reduce *mean* of per-device gradients is biased
+toward devices with fewer samples. The paper synchronizes batch sizes with
+an All-to-all, then computes a weighted average of gradients proportional to
+per-device batch size.
+
+Two equivalent realizations:
+
+1. `weighted_grad_sync` — the explicit per-device form (inside `shard_map`):
+   exchange weights (all_to_all of the per-device weight vector — paper-
+   faithful), then psum(w_i * g_i) / psum(w_i).
+
+2. The pjit-native form used by the trainer: compute per-device *summed*
+   loss and weight, let pjit's global reduction produce sum(loss)/sum(w) —
+   the gradient of that scalar is algebraically identical to (1). We test
+   that identity in tests/dist_scripts/check_weighted_sync.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def exchange_weights(weight: jax.Array, axis_names: Sequence[str]) -> jax.Array:
+    """All-to-all the per-device weight so every device knows all batch sizes
+    (the paper's synchronization step). Returns the vector of all weights.
+
+    Implemented as all_gather (the all-to-all of a replicated scalar
+    broadcast degenerates to a gather; ICI cost is identical for this size).
+    """
+    w = weight.astype(jnp.float32)
+    out = w
+    for ax in axis_names:
+        out = jax.lax.all_gather(out, ax)
+    return out.reshape(-1)
+
+
+def weighted_grad_sync(
+    grads: Any, weight: jax.Array, axis_names: Sequence[str]
+) -> Tuple[Any, jax.Array]:
+    """Per-device gradient tree + scalar weight -> weighted-average tree.
+
+    Call inside shard_map over the data axes. grads must be the *sum*
+    gradient over local samples times nothing — i.e. grad of (local summed
+    loss); weight is the local token/sample count. Returns (g, total_weight)
+    where g = Σ_i g_i / Σ_i w_i  — the unbiased global-mean gradient.
+    """
+    w = weight.astype(jnp.float32)
+    total = w
+    for ax in axis_names:
+        total = jax.lax.psum(total, ax)
+
+    def sync(g):
+        s = g.astype(jnp.float32)
+        for ax in axis_names:
+            s = jax.lax.psum(s, ax)
+        return (s / jnp.maximum(total, 1.0)).astype(g.dtype)
+
+    return jax.tree.map(sync, grads), total
+
+
+def unweighted_grad_sync(grads: Any, axis_names: Sequence[str], num_devices: int) -> Any:
+    """The biased baseline: plain mean of per-device mean gradients."""
+
+    def sync(g):
+        s = g.astype(jnp.float32)
+        for ax in axis_names:
+            s = jax.lax.psum(s, ax)
+        return (s / num_devices).astype(g.dtype)
+
+    return jax.tree.map(sync, grads)

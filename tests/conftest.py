@@ -1,0 +1,20 @@
+"""Shared pytest fixtures.
+
+NOTE: XLA_FLAGS device-count forcing is deliberately NOT set here — smoke
+tests and benches must see the single real CPU device. Distribution tests
+spawn subprocesses (see tests/test_distributed.py) or use helper scripts that
+set the flag before importing jax.
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import jax
+
+    return jax.random.PRNGKey(0)

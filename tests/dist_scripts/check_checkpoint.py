@@ -1,0 +1,117 @@
+"""Elastic checkpoint resuming (paper §5.2): save sparse shards from 4
+'devices', reload onto 8 and onto 2, and verify every row lands on the right
+device with bit-identical content. Dense params round-trip through the single
+replicated file. Also: the modulo mapping (GPU r loads shard r % n_old).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as C
+
+
+def main():
+    rng = np.random.default_rng(0)
+    ROWS, D = 64, 8  # per-shard rows when saved from 4 devices
+    step = 7
+
+    # --- build 4 device shards: emb rows + rowwise opt state + a scalar
+    shards = []
+    for r in range(4):
+        shards.append(
+            {
+                "emb": jnp.asarray(rng.normal(size=(ROWS, D)), jnp.float32),
+                "opt": {
+                    "mu": jnp.asarray(rng.normal(size=(ROWS,)), jnp.float32),
+                    "step": jnp.int32(step),
+                },
+                "bf16_leaf": jnp.asarray(rng.normal(size=(ROWS, 4)), jnp.bfloat16),
+            }
+        )
+
+    with tempfile.TemporaryDirectory() as d:
+        dense = {"w": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32),
+                 "scale": jnp.asarray(rng.normal(size=(16,)), jnp.bfloat16)}
+        C.save_dense(d, step, dense)
+        for r, s in enumerate(shards):
+            C.save_sparse_shard(d, step, r, 4, s)
+        C.write_meta(d, step, {"num_devices": 4})
+        assert C.latest_step(d) == step
+
+        # --- dense round-trip (incl. bf16 leaf)
+        dense2 = C.load_dense(d, step, jax.eval_shape(lambda: dense))
+        np.testing.assert_array_equal(np.asarray(dense2["w"]), np.asarray(dense["w"]))
+        np.testing.assert_array_equal(
+            np.asarray(dense2["scale"].astype(jnp.float32)),
+            np.asarray(dense["scale"].astype(jnp.float32)),
+        )
+
+        # --- same-count reload
+        like = jax.eval_shape(lambda: shards[0])
+        for r in range(4):
+            got = C.load_sparse_shard(d, step, r, 4, like)
+            np.testing.assert_array_equal(np.asarray(got["emb"]), np.asarray(shards[r]["emb"]))
+
+        # --- scale UP 4 -> 8: device r gets half of old shard (r % 4)
+        like_up = jax.eval_shape(
+            lambda: {
+                "emb": jnp.zeros((ROWS // 2, D), jnp.float32),
+                "opt": {"mu": jnp.zeros((ROWS // 2,), jnp.float32),
+                        "step": jnp.int32(0)},
+                "bf16_leaf": jnp.zeros((ROWS // 2, 4), jnp.bfloat16),
+            }
+        )
+        for r in range(8):
+            got = C.load_sparse_shard(d, step, r, 8, like_up)
+            src = shards[r % 4]
+            half = 0 if r < 4 else 1
+            lo, hi = half * ROWS // 2, (half + 1) * ROWS // 2
+            np.testing.assert_array_equal(
+                np.asarray(got["emb"]), np.asarray(src["emb"][lo:hi])
+            )
+            np.testing.assert_array_equal(
+                np.asarray(got["opt"]["mu"]), np.asarray(src["opt"]["mu"][lo:hi])
+            )
+            assert int(got["opt"]["step"]) == step  # scalars pass through
+        print("scale-up 4->8 OK (modulo mapping verified)")
+
+        # --- scale DOWN 4 -> 2: device r concatenates shards {r, r+2}
+        like_down = jax.eval_shape(
+            lambda: {
+                "emb": jnp.zeros((2 * ROWS, D), jnp.float32),
+                "opt": {"mu": jnp.zeros((2 * ROWS,), jnp.float32),
+                        "step": jnp.int32(0)},
+                "bf16_leaf": jnp.zeros((2 * ROWS, 4), jnp.bfloat16),
+            }
+        )
+        for r in range(2):
+            got = C.load_sparse_shard(d, step, r, 2, like_down)
+            expect = np.concatenate(
+                [np.asarray(shards[r]["emb"]), np.asarray(shards[r + 2]["emb"])]
+            )
+            np.testing.assert_array_equal(np.asarray(got["emb"]), expect)
+        print("scale-down 4->2 OK")
+
+        # --- full save->load->save->load chain preserves training state:
+        # round-trip up to 8 then back down to 4 reproduces the originals.
+        for r in range(8):
+            got = C.load_sparse_shard(d, step, r, 8, like_up)
+            C.save_sparse_shard(d, step + 1, r, 8, got)
+        for r in range(4):
+            back = C.load_sparse_shard(d, step + 1, r, 4, like)
+            np.testing.assert_array_equal(
+                np.asarray(back["emb"]), np.asarray(shards[r]["emb"])
+            )
+        print("round-trip 4->8->4 identical")
+
+    print("ELASTIC CKPT OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""8-device train_step integration: a reduced arch trains under a (2 data ×
+4 model) mesh with FSDP + TP sharding; loss decreases and matches the
+single-device step bit-for-bit-ish (same batch, same init).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.dist import DistContext
+from repro.common.sharding import DEFAULT_RULES, fit_spec_to_shape
+from repro.configs.registry import get_config
+from repro.launch.mesh import make_host_mesh, rules_for_mesh
+from repro.optim.adam import Adam
+from repro.train import trainer as T
+
+
+def make_batch(cfg, B, S, rng):
+    return {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "mask": jnp.ones((B, S), bool),
+    }
+
+
+def main():
+    assert len(jax.devices()) == 8
+    mesh = make_host_mesh(data=2, model=4)
+    rules = rules_for_mesh(mesh)
+
+    cfg = dataclasses.replace(
+        get_config("yi-6b").reduced(), tp=4, num_heads=4, num_kv_heads=4,
+        d_model=256, head_dim=64, d_ff=512, vocab_size=512,
+    )
+    opt = Adam(lr=1e-2)
+    params, ostate = T.init_all(cfg, jax.random.PRNGKey(0), opt)
+    rng = np.random.default_rng(0)
+    batch = make_batch(cfg, 8, 32, rng)
+
+    # single-device reference
+    ref_step = jax.jit(T.make_train_step(cfg, opt))
+    p_ref, o_ref, m_ref = ref_step(params, ostate, batch)
+
+    # sharded: FSDP over data, TP over model
+    pspecs = T.param_specs(cfg, rules, fsdp=True, data_size=2)
+    pstructs = jax.eval_shape(lambda: params)
+    pshard = jax.tree.map(
+        lambda sp, st: NamedSharding(mesh, fit_spec_to_shape(sp, st.shape, mesh)),
+        pspecs, pstructs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    params_s = jax.device_put(params, pshard)
+    ostate_s = jax.device_put(
+        ostate,
+        T.opt_state_specs(pshard)._replace(step=NamedSharding(mesh, P())),
+    )
+    batch_s = jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P(("data",)))), batch
+    )
+    dist = DistContext(mesh=mesh, batch_axes=("data",))
+    step = jax.jit(T.make_train_step(cfg, opt, dist=dist))
+    with jax.set_mesh(mesh):
+        p_s, o_s, m_s = step(params_s, ostate_s, batch_s)
+
+    assert abs(float(m_s["loss"]) - float(m_ref["loss"])) < 1e-3, (
+        float(m_s["loss"]), float(m_ref["loss"])
+    )
+    # parameters agree after one update
+    err = jax.tree.reduce(
+        max,
+        jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                               - b.astype(jnp.float32)))),
+            p_ref, jax.device_get(p_s),
+        ),
+    )
+    # Adam's first step is ±lr per element (m/sqrt(v) = sign(g)); reduction-
+    # order noise on near-zero grads flips signs, so the bound is O(lr), not
+    # O(eps). Loss equality above is the sharp correctness check.
+    assert err <= 2.5 * opt.lr, err
+    print(f"sharded-vs-single loss Δ={abs(float(m_s['loss']) - float(m_ref['loss'])):.2e} "
+          f"param Δ={err:.2e}")
+
+    # a few more steps: loss must go down under the sharded step
+    losses = [float(m_s["loss"])]
+    for _ in range(5):
+        with jax.set_mesh(mesh):
+            p_s, o_s, m_s = step(p_s, o_s, batch_s)
+        losses.append(float(m_s["loss"]))
+    assert losses[-1] < losses[0], losses
+    print("loss:", " -> ".join(f"{l:.3f}" for l in losses))
+    print("TRAIN STEP 8DEV OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Weighted gradient sync correctness on 8 simulated devices (paper §5.1).
+
+Three-way agreement on duplicate-free data with *different per-device batch
+sizes* (simulated by masking):
+
+  (a) explicit shard_map weighted_grad_sync (paper-faithful all-reduce form),
+  (b) the trainer's pjit-native global-sum/global-weight loss,
+  (c) a single-device oracle computing the gradient over all valid samples.
+
+Also checks the *biased* unweighted mean differs (i.e. the paper's fix
+matters) when batch sizes are unequal.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.train.weighted_sync import (
+    exchange_weights,
+    unweighted_grad_sync,
+    weighted_grad_sync,
+)
+
+
+def main():
+    assert len(jax.devices()) == 8
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    rng = np.random.default_rng(0)
+    D = 16
+    w_param = jnp.asarray(rng.normal(size=(D,)), jnp.float32)
+
+    # Per-device batches of *different* effective sizes via masking.
+    B_per, NDEV = 8, 8
+    x = jnp.asarray(rng.normal(size=(NDEV * B_per, D)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(NDEV * B_per,)), jnp.float32)
+    sizes = np.array([1, 2, 3, 8, 5, 6, 7, 8])  # valid rows per device
+    mask_np = np.zeros((NDEV, B_per), np.float32)
+    for d, s in enumerate(sizes):
+        mask_np[d, :s] = 1.0
+    mask = jnp.asarray(mask_np.reshape(-1))
+
+    def local_loss_sum(w, xb, yb, mb):
+        pred = xb @ w
+        return jnp.sum(mb * (pred - yb) ** 2), jnp.sum(mb)
+
+    # ---- (c) oracle: global weighted mean on one device
+    def global_loss(w):
+        s, n = local_loss_sum(w, x, y, mask)
+        return s / n
+
+    g_oracle = jax.grad(global_loss)(w_param)
+
+    # ---- (a) explicit shard_map weighted sync
+    def device_fn(w, xb, yb, mb):
+        def lsum(w):
+            return local_loss_sum(w, xb, yb, mb)[0]
+
+        g_local = jax.grad(lsum)(w)
+        weight = jnp.sum(mb)
+        # paper: exchange batch sizes first, then weighted-average grads
+        all_w = exchange_weights(weight, ("data",))
+        g, total = weighted_grad_sync(g_local, weight, ("data",))
+        g_biased = unweighted_grad_sync(
+            jax.grad(lambda w: lsum(w) / jnp.maximum(weight, 1.0))(w), ("data",), 8
+        )
+        return g, g_biased, all_w, total
+
+    shard = jax.shard_map(
+        device_fn,
+        mesh=mesh,
+        in_specs=(P(), P("data"), P("data"), P("data")),
+        out_specs=(P(), P(), P(), P()),
+        check_vma=False,
+    )
+    with jax.set_mesh(mesh):
+        g_weighted, g_biased, all_w, total = shard(w_param, x, y, mask)
+
+    np.testing.assert_allclose(np.asarray(all_w), sizes.astype(np.float32))
+    assert float(total) == float(sizes.sum())
+    np.testing.assert_allclose(
+        np.asarray(g_weighted), np.asarray(g_oracle), rtol=1e-5, atol=1e-6
+    )
+    # the biased mean must differ measurably on skewed batch sizes
+    assert np.max(np.abs(np.asarray(g_biased) - np.asarray(g_oracle))) > 1e-3
+    print("explicit shard_map weighted sync matches oracle")
+
+    # ---- (b) pjit-native: global-sum / global-weight
+    xs = jax.device_put(x, NamedSharding(mesh, P("data")))
+    ys = jax.device_put(y, NamedSharding(mesh, P("data")))
+    ms = jax.device_put(mask, NamedSharding(mesh, P("data")))
+
+    @jax.jit
+    def pjit_grad(w):
+        s, n = local_loss_sum(w, xs, ys, ms)
+        return jax.grad(lambda w: local_loss_sum(w, xs, ys, ms)[0]
+                        / local_loss_sum(w, xs, ys, ms)[1])(w)
+
+    with jax.set_mesh(mesh):
+        g_pjit = pjit_grad(w_param)
+    np.testing.assert_allclose(
+        np.asarray(g_pjit), np.asarray(g_oracle), rtol=1e-5, atol=1e-6
+    )
+    print("pjit sum/sum form matches oracle")
+    print("WEIGHTED SYNC OK")
+
+
+if __name__ == "__main__":
+    main()

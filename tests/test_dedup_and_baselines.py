@@ -1,0 +1,85 @@
+"""Tests for two-stage dedup primitives (§4.3) and the baseline tables."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dedup, mch, static_table as stt
+
+
+class TestUniqueStatic:
+    def test_roundtrip(self):
+        ids = jnp.array([5, 3, 5, 5, 9, -1, 3], jnp.int64)
+        u = dedup.unique_static(ids, size=7)
+        assert int(u.count) == 3
+        restored = dedup.restore(u.ids, u.inverse)
+        np.testing.assert_array_equal(np.asarray(restored), np.asarray(ids))
+
+    def test_payload_restore(self):
+        ids = jnp.array([2, 7, 2, 7, 7], jnp.int64)
+        u = dedup.unique_static(ids, size=5)
+        payload = u.ids.astype(jnp.float32)[:, None] * jnp.ones((1, 3))
+        out = dedup.restore(payload, u.inverse)
+        np.testing.assert_allclose(np.asarray(out[:, 0]), [2, 7, 2, 7, 7])
+
+    def test_dedup_ratio(self):
+        ids = jnp.array([1, 1, 1, 1], jnp.int64)
+        assert float(dedup.dedup_ratio(ids)) == 0.75
+        assert float(dedup.dedup_ratio(jnp.array([1, 2, 3, 4], jnp.int64))) == 0.0
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.integers(min_value=-1, max_value=50), min_size=1, max_size=64))
+    def test_property_restore_exact(self, ids):
+        arr = jnp.array(ids, jnp.int64)
+        u = dedup.unique_static(arr, size=len(ids))
+        np.testing.assert_array_equal(
+            np.asarray(dedup.restore(u.ids, u.inverse)), np.asarray(arr)
+        )
+        reals = set(x for x in ids if x != -1)
+        assert int(u.count) == len(reals)
+
+
+class TestMCH:
+    def test_insert_find(self):
+        cfg = mch.MCHConfig(capacity=32, embed_dim=4)
+        s = mch.create(cfg, jax.random.PRNGKey(0))
+        s = mch.insert(s, jnp.arange(20, dtype=jnp.int64), cfg)
+        assert int(s.used) == 20
+        f = mch.find(s, jnp.arange(20, dtype=jnp.int64), cfg)
+        assert (np.asarray(f) >= 0).all()
+        assert len(np.unique(np.asarray(f))) == 20  # distinct rows
+        assert int(mch.find(s, jnp.array([999], jnp.int64), cfg)[0]) == -1
+
+    def test_lfu_eviction(self):
+        """High-frequency mappings survive eviction (TorchRec MCH semantics)."""
+        cfg = mch.MCHConfig(capacity=16, embed_dim=2)
+        s = mch.create(cfg, jax.random.PRNGKey(0))
+        s = mch.insert(s, jnp.arange(16, dtype=jnp.int64), cfg)
+        for _ in range(5):  # heat up ids 0..7
+            _, s = mch.lookup(s, jnp.arange(8, dtype=jnp.int64), cfg)
+        s = mch.insert(s, jnp.arange(100, 108, dtype=jnp.int64), cfg)  # evicts 8 cold
+        hot = mch.find(s, jnp.arange(8, dtype=jnp.int64), cfg)
+        assert (np.asarray(hot) >= 0).all(), "hot ids must survive LFU eviction"
+
+    def test_fixed_memory(self):
+        """MCH preallocates everything — emb array never grows (Table 3 OOM)."""
+        cfg = mch.MCHConfig(capacity=32, embed_dim=4)
+        s = mch.create(cfg, jax.random.PRNGKey(0))
+        shape0 = s.emb.shape
+        s = mch.insert(s, jnp.arange(100, dtype=jnp.int64), cfg)
+        assert s.emb.shape == shape0 and int(s.used) <= 32
+
+
+class TestStaticTable:
+    def test_overflow_hits_default_row(self):
+        cfg = stt.StaticTableConfig(capacity=10, embed_dim=4)
+        s = stt.create(cfg, jax.random.PRNGKey(0))
+        v = stt.lookup(s, jnp.array([3, 10, 500], jnp.int64), cfg)
+        np.testing.assert_allclose(np.asarray(v[1]), np.asarray(s.emb[-1]))
+        np.testing.assert_allclose(np.asarray(v[2]), np.asarray(s.emb[-1]))
+        assert not np.allclose(np.asarray(v[0]), np.asarray(s.emb[-1]))
+
+    def test_overflow_fraction(self):
+        cfg = stt.StaticTableConfig(capacity=10, embed_dim=4)
+        ids = jnp.array([1, 2, 11, 12, -1], jnp.int64)
+        assert float(stt.overflow_fraction(ids, cfg)) == 0.5

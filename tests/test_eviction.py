@@ -1,0 +1,88 @@
+"""Eviction tests (§4.1): the counters/timestamps metadata drives LFU/LRU
+eviction; eviction frees key slots and compacts embedding rows, and the
+surviving entries keep resolving to their (moved) embeddings bit-exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hashtable as ht
+
+
+def _table_with_traffic():
+    cfg = ht.HashTableConfig(capacity=1 << 8, embed_dim=8, chunk_rows=64)
+    t = ht.DynamicHashTable(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(rng.integers(0, 10**9, 48), jnp.int64)
+    t.insert(ids)
+    # hot traffic on the first 8 ids, at late timestamps
+    for step in range(5):
+        t.lookup(ids[:8], step=step + 10)
+    return t, ids
+
+
+def test_lfu_evicts_cold_entries():
+    t, ids = _table_with_traffic()
+    before = len(t)
+    vec_hot_before = np.asarray(t.lookup(ids[:8]))
+    n = t.evict(16, policy="lfu")
+    assert n == 16
+    assert len(t) == before - 16
+    # hot ids survive with identical embeddings (rows compacted, not lost)
+    rows = np.asarray(t.find_rows(ids[:8]))
+    assert (rows >= 0).all()
+    np.testing.assert_array_equal(np.asarray(t.lookup(ids[:8])), vec_hot_before)
+    # at least 16 of the cold ids are gone
+    cold_rows = np.asarray(t.find_rows(ids[8:]))
+    assert (cold_rows < 0).sum() >= 16
+
+
+def test_lru_evicts_oldest():
+    cfg = ht.HashTableConfig(capacity=1 << 8, embed_dim=4, chunk_rows=64)
+    t = ht.DynamicHashTable(cfg, jax.random.PRNGKey(1))
+    old = jnp.asarray([1, 2, 3, 4], jnp.int64)
+    new = jnp.asarray([5, 6, 7, 8], jnp.int64)
+    t.insert(old)
+    t.lookup(old, step=1)
+    t.insert(new)
+    t.lookup(new, step=100)
+    t.evict(4, policy="lru")
+    assert (np.asarray(t.find_rows(old)) < 0).all()
+    assert (np.asarray(t.find_rows(new)) >= 0).all()
+
+
+def test_eviction_frees_rows_for_reuse():
+    cfg = ht.HashTableConfig(capacity=1 << 8, embed_dim=4, chunk_rows=64)
+    t = ht.DynamicHashTable(cfg, jax.random.PRNGKey(2))
+    t.insert(jnp.arange(1, 41, dtype=jnp.int64))
+    rows_before = int(t.state.next_row)
+    t.evict(20)
+    assert int(t.state.next_row) == rows_before - 20  # rows compacted
+    # new inserts reuse the freed space
+    t.insert(jnp.arange(100, 120, dtype=jnp.int64))
+    assert int(t.state.next_row) == rows_before
+    assert (np.asarray(t.find_rows(jnp.arange(100, 120, dtype=jnp.int64))) >= 0).all()
+
+
+def test_evict_then_insert_roundtrip_random():
+    rng = np.random.default_rng(3)
+    cfg = ht.HashTableConfig(capacity=1 << 9, embed_dim=4, chunk_rows=64)
+    t = ht.DynamicHashTable(cfg, jax.random.PRNGKey(3))
+    live = {}
+    for round_ in range(4):
+        ids = rng.integers(0, 10**9, 40).astype(np.int64)
+        t.insert(jnp.asarray(ids))
+        vecs = np.asarray(t.lookup(jnp.asarray(ids), step=round_))
+        for i, x in enumerate(ids):
+            live[int(x)] = vecs[i]
+        t.evict(10, policy="lfu", step=round_)
+        # every id still present must resolve to its original embedding
+        keys = np.array(list(live), np.int64)
+        rows = np.asarray(t.find_rows(jnp.asarray(keys)))
+        present = keys[rows >= 0]
+        got = np.asarray(t.lookup(jnp.asarray(present)))
+        want = np.stack([live[int(k)] for k in present])
+        np.testing.assert_array_equal(got, want)
+        for k in keys[rows < 0]:
+            live.pop(int(k))

@@ -1,0 +1,55 @@
+"""The runnable examples stay runnable (subprocess smoke, tight budgets)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+SRC = os.path.join(ROOT, "src")
+
+
+def run_example(path, *args, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, path), *args],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert proc.returncode == 0, f"{path} failed:\n{proc.stdout}\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_quickstart():
+    out = run_example("examples/quickstart.py")
+    assert "OK" in out and "merged tables" in out
+
+
+def test_train_grm_smoke():
+    out = run_example("examples/train_grm.py", "--steps", "4",
+                      "--ckpt-every", "0")
+    assert "done." in out
+
+
+def test_serve_lm_smoke():
+    out = run_example("examples/serve_lm.py", "--arch", "recurrentgemma-9b",
+                      "--batch", "2", "--prompt-len", "8", "--tokens", "4")
+    assert "OK" in out
+
+
+def test_serve_grm_smoke():
+    out = run_example("examples/serve_grm.py", "--requests", "8",
+                      "--avg-len", "24")
+    assert "OK" in out
+
+
+def test_launch_train_smoke():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "qwen2-0.5b",
+         "--reduced", "--steps", "3", "--batch", "2", "--seq", "32"],
+        capture_output=True, text=True, timeout=420, env=env, cwd=ROOT,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "done." in proc.stdout

@@ -1,0 +1,148 @@
+"""Unit + property tests for the dynamic hash embedding table (paper §4.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashtable as ht
+
+
+def make_table(capacity=1024, dim=8, chunk=256, groups=8):
+    cfg = ht.HashTableConfig(
+        capacity=capacity, embed_dim=dim, chunk_rows=chunk, num_groups=groups
+    )
+    return ht.DynamicHashTable(cfg, jax.random.PRNGKey(0))
+
+
+class TestProbing:
+    def test_theorem1_full_coverage(self):
+        """Thm 1: probe sequence covers every slot of its residue class."""
+        m, g = 256, 8
+        ids = jnp.arange(0, 500, 7, dtype=jnp.int64)
+        h0, s = ht.probe_params(ids, m, g)
+        h0, s = np.asarray(h0), np.asarray(s)
+        assert np.all(s % g == 0) and np.all((s // g) % 2 == 1), "Eq.5: S = odd * G"
+        for i in range(len(ids)):
+            seq = (h0[i] + np.arange(m // g) * s[i]) % m
+            # the probe walk visits every slot of residue class h0 % g exactly once
+            expect = set(range(h0[i] % g, m, g))
+            assert set(seq.tolist()) == expect
+
+    def test_stride_is_key_dependent(self):
+        """Anti-clustering: different keys get different strides (Eq. 5)."""
+        ids = jnp.arange(1, 2000, dtype=jnp.int64)
+        _, s = ht.probe_params(ids, 1 << 14, 8)
+        assert len(np.unique(np.asarray(s))) > 100
+
+    def test_murmur_avalanche(self):
+        """Single-bit input changes flip ~half the output bits."""
+        x = jnp.arange(1024, dtype=jnp.int64)
+        h1 = np.asarray(ht.murmur3_fmix64(x)).astype(np.uint64)
+        h2 = np.asarray(ht.murmur3_fmix64(x ^ 1)).astype(np.uint64)
+        flips = np.unpackbits((h1 ^ h2).view(np.uint8)).mean() * 64
+        assert 24 < flips < 40  # expect ~32
+
+
+class TestInsertFind:
+    def test_insert_then_find(self):
+        tbl = make_table()
+        ids = jnp.array(np.random.default_rng(0).integers(0, 1 << 60, 300), jnp.int64)
+        rows = tbl.insert(ids)
+        assert int((rows >= 0).sum()) == 300
+        assert np.array_equal(np.asarray(tbl.find_rows(ids)), np.asarray(rows))
+
+    def test_absent_ids_not_found(self):
+        tbl = make_table()
+        tbl.insert(jnp.arange(100, dtype=jnp.int64))
+        rows = tbl.find_rows(jnp.arange(1000, 1100, dtype=jnp.int64))
+        assert int((rows == ht.NO_ROW).sum()) == 100
+
+    def test_duplicates_share_row(self):
+        tbl = make_table()
+        ids = jnp.array([7, 7, 7, 9, 9, 7], jnp.int64)
+        rows = np.asarray(tbl.insert(ids))
+        assert len(set(rows[[0, 1, 2, 5]].tolist())) == 1
+        assert rows[3] == rows[4] != rows[0]
+        assert len(tbl) == 2
+
+    def test_padding_ignored(self):
+        tbl = make_table()
+        rows = tbl.insert(jnp.array([-1, 5, -1], jnp.int64))
+        assert np.asarray(rows)[0] == ht.NO_ROW and np.asarray(rows)[2] == ht.NO_ROW
+        assert len(tbl) == 1
+
+    def test_insert_idempotent(self):
+        tbl = make_table()
+        ids = jnp.array(np.random.default_rng(1).integers(0, 1 << 40, 200), jnp.int64)
+        r1 = tbl.insert(ids)
+        r2 = tbl.insert(ids)
+        assert np.array_equal(np.asarray(r1), np.asarray(r2))
+        assert len(tbl) == len(np.unique(np.asarray(ids)))
+
+
+class TestExpansion:
+    def test_key_expansion_preserves_rows(self):
+        """§4.1: expansion migrates keys+pointers only; embedding rows stable."""
+        tbl = make_table(capacity=256, chunk=128)
+        ids = jnp.array(np.random.default_rng(2).integers(0, 1 << 50, 150), jnp.int64)
+        rows = np.asarray(tbl.insert(ids))
+        emb_before = np.asarray(tbl.state.emb[rows[:20]])
+        tbl.insert(jnp.array(np.random.default_rng(3).integers(1 << 50, 1 << 51, 800), jnp.int64))
+        assert tbl.cfg.capacity > 256  # expansion happened
+        rows_after = np.asarray(tbl.find_rows(ids))
+        assert np.array_equal(rows, rows_after)
+        np.testing.assert_array_equal(emb_before, np.asarray(tbl.state.emb[rows[:20]]))
+
+    def test_spare_chunk_invariant(self):
+        tbl = make_table(capacity=1 << 14, chunk=64)
+        for i in range(6):
+            tbl.insert(jnp.arange(i * 60, (i + 1) * 60, dtype=jnp.int64))
+            free = tbl.state.row_capacity - int(tbl.state.next_row)
+            assert free >= 0
+
+    def test_load_factor_bound(self):
+        tbl = make_table(capacity=256, chunk=256)
+        tbl.insert(jnp.array(np.random.default_rng(4).integers(0, 1 << 40, 1000), jnp.int64))
+        assert int(tbl.state.size) / tbl.cfg.capacity <= tbl.cfg.max_load_factor + 1e-9
+
+
+class TestLookup:
+    def test_lookup_counters(self):
+        tbl = make_table()
+        ids = jnp.arange(10, dtype=jnp.int64)
+        rows = np.asarray(tbl.insert(ids))
+        tbl.lookup(ids, step=3)
+        tbl.lookup(ids[:5], step=7)
+        c = np.asarray(tbl.state.counters[rows])
+        assert np.array_equal(c, [2] * 5 + [1] * 5)
+        t = np.asarray(tbl.state.timestamps[rows])
+        assert np.array_equal(t, [7] * 5 + [3] * 5)
+
+    def test_lookup_missing_returns_zero(self):
+        tbl = make_table()
+        tbl.insert(jnp.arange(4, dtype=jnp.int64))
+        v = tbl.lookup(jnp.array([999], jnp.int64))
+        assert np.all(np.asarray(v) == 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    ids=st.lists(st.integers(min_value=0, max_value=(1 << 62)), min_size=1, max_size=128),
+    capacity_pow=st.integers(min_value=8, max_value=12),
+)
+def test_property_insert_find_roundtrip(ids, capacity_pow):
+    """Property: any ID batch inserts and is found at a stable, unique row."""
+    cfg = ht.HashTableConfig(capacity=1 << capacity_pow, embed_dim=4, chunk_rows=128)
+    tbl = ht.DynamicHashTable(cfg, None)
+    arr = jnp.array(ids, jnp.int64)
+    rows = np.asarray(tbl.insert(arr))
+    assert (rows >= 0).all()
+    # same id -> same row; different id -> different row
+    mapping = {}
+    for i, x in enumerate(ids):
+        if x in mapping:
+            assert mapping[x] == rows[i]
+        mapping[x] = rows[i]
+    assert len(set(mapping.values())) == len(mapping)
+    assert np.array_equal(np.asarray(tbl.find_rows(arr)), rows)

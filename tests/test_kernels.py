@@ -1,0 +1,140 @@
+"""Per-kernel correctness sweeps: the Pallas kernel body (interpret=True on
+CPU) vs the pure-jnp oracle in repro/kernels/ref.py, across shapes & dtypes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref as R
+from repro.kernels.hstu_attention import hstu_attention_fused
+from repro.kernels.seg_sum import seg_sum
+from repro.kernels.window_attention import window_decode_attention
+
+
+# ---------------------------------------------------------------------------
+# HSTU fused SiLU attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,H,hd", [
+    (1, 16, 1, 8),
+    (2, 64, 2, 16),
+    (1, 128, 4, 32),
+    (2, 100, 2, 24),   # non-tile-multiple seq + head dim
+    (1, 257, 1, 8),    # prime-ish seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hstu_kernel_vs_ref(B, S, H, hd, dtype):
+    rng = np.random.default_rng(hash((B, S, H, hd, str(dtype))) % 2**31)
+    mk = lambda: jnp.asarray(rng.normal(0, 0.5, (B, S, H, hd)), dtype)
+    q, k, v, u = mk(), mk(), mk(), mk()
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    want = R.hstu_attention_ref(q, k, v, u, pos, pos)
+    got = hstu_attention_fused(q, k, v, u, block_q=32, block_k=32, interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_hstu_chunked_matches_ref():
+    rng = np.random.default_rng(0)
+    B, S, H, hd = 2, 96, 2, 16
+    mk = lambda: jnp.asarray(rng.normal(0, 0.5, (B, S, H, hd)), jnp.float32)
+    q, k, v, u = mk(), mk(), mk(), mk()
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    want = R.hstu_attention_ref(q, k, v, u, pos, pos)
+    got = R.hstu_attention_chunked(q, k, v, u, pos, pos, chunk=17)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_hstu_ops_dispatch():
+    rng = np.random.default_rng(1)
+    B, S, H, hd = 1, 32, 2, 8
+    mk = lambda: jnp.asarray(rng.normal(0, 0.5, (B, S, H, hd)), jnp.float32)
+    q, k, v, u = mk(), mk(), mk(), mk()
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    a = ops.hstu_attention(q, k, v, u, pos, pos, impl="ref")
+    b = ops.hstu_attention(q, k, v, u, pos, pos, impl="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Sorted segment sum
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("N,d,U", [
+    (32, 8, 16), (256, 16, 64), (100, 24, 33), (17, 4, 5),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_seg_sum_vs_ref(N, d, U, dtype):
+    rng = np.random.default_rng(N * d)
+    ids = np.sort(rng.integers(0, U, N)).astype(np.int32)
+    # sprinkle padding (sorted to the end as large ids)
+    ids[-max(1, N // 10):] = np.iinfo(np.int32).max
+    grads = jnp.asarray(rng.normal(size=(N, d)), dtype)
+    want = R.seg_sum_ref(grads, jnp.asarray(ids), U)
+    got = seg_sum(grads, jnp.asarray(ids), U, block_u=16, block_n=16, block_d=8,
+                  interpret=True)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_seg_sum_duplicates_accumulate():
+    ids = jnp.asarray(np.zeros(64, np.int32))
+    grads = jnp.ones((64, 4), jnp.float32)
+    out = seg_sum(grads, ids, 8, block_u=8, block_n=16, block_d=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[0]), 64.0 * np.ones(4))
+    np.testing.assert_allclose(np.asarray(out[1:]), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("N,G,hd,W,window", [
+    (2, 1, 16, 64, 32),
+    (3, 4, 32, 128, 128),
+    (1, 2, 24, 100, 50),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_window_decode_vs_ref(N, G, hd, W, window, dtype):
+    rng = np.random.default_rng(N * W)
+    q = jnp.asarray(rng.normal(size=(N, G, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(N, W, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(N, W, hd)), dtype)
+    # ring-buffer positions: slot i holds some position ≡ i (mod W)
+    q_pos = jnp.asarray(rng.integers(window, 4 * W, (N,)), jnp.int32)
+    slots = np.arange(W)
+    k_pos = np.stack([
+        int(qp) - ((int(qp) - slots) % W) for qp in np.asarray(q_pos)
+    ]).astype(np.int32)
+    k_pos = jnp.asarray(k_pos)
+    want = R.window_decode_ref(q, k, v, k_pos, q_pos, window)
+    got = window_decode_attention(q, k, v, k_pos, q_pos, window,
+                                  block_w=32, interpret=True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_window_decode_masks_everything_outside_window():
+    # all positions outside the window -> uniform over the single valid slot
+    N, G, hd, W = 1, 1, 8, 16
+    q = jnp.ones((N, G, hd), jnp.float32)
+    k = jnp.asarray(np.random.default_rng(0).normal(size=(N, W, hd)), jnp.float32)
+    v = jnp.asarray(np.arange(W, dtype=np.float32)[None, :, None]
+                    * np.ones((N, W, hd), np.float32))
+    q_pos = jnp.asarray([100], jnp.int32)
+    k_pos = np.full((N, W), -1, np.int32)
+    k_pos[0, 3] = 100  # only slot 3 valid
+    got = window_decode_attention(q, k, v, jnp.asarray(k_pos), q_pos, 8,
+                                  block_w=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got)[0, 0], 3.0 * np.ones(hd), rtol=1e-5)

@@ -1,0 +1,236 @@
+"""System-level behaviour tests: config registry invariants, input specs,
+sharding-spec properties (hypothesis), cost-model sanity, and the
+paper-faithful vs production rule split.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.common.params import fsdp_specs, param_count, partition_specs
+from repro.common.sharding import (
+    DEFAULT_RULES,
+    PAPER_FAITHFUL_RULES,
+    fit_spec_to_shape,
+    logical_to_mesh_spec,
+)
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import (
+    ARCHS,
+    ASSIGNED,
+    get_config,
+    is_subquadratic,
+    long_context_variant,
+    supports_shape,
+)
+from repro.launch.cost_model import ParallelPlan, n_active_params, n_params, step_cost
+from repro.models.transformer import lm_param_defs
+from repro.train import trainer as T
+
+
+# ---------------------------------------------------------------------------
+# Registry / configs
+# ---------------------------------------------------------------------------
+
+EXPECTED = {
+    "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+    "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+    "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+    "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+    "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+    "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+}
+
+
+def test_all_ten_archs_present_with_exact_dims():
+    assert set(EXPECTED) == set(ASSIGNED)
+    for name, (L, d, H, kv, ff, V) in EXPECTED.items():
+        c = get_config(name)
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                c.d_ff, c.vocab_size) == (L, d, H, kv, ff, V), name
+        assert c.source, f"{name} missing source citation"
+
+
+def test_moe_configs():
+    l4 = get_config("llama4-scout-17b-a16e")
+    assert l4.num_experts == 16 and l4.experts_per_token == 1 and l4.shared_expert
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    assert phi.num_experts == 16 and phi.experts_per_token == 2
+
+
+def test_documented_skips():
+    hub = get_config("hubert-xlarge")
+    assert hub.is_encoder_only
+    assert not supports_shape(hub, "decode_32k")
+    assert not supports_shape(hub, "long_500k")
+    for name in ASSIGNED:
+        c = get_config(name)
+        if name != "hubert-xlarge":
+            assert supports_shape(c, "decode_32k"), name
+
+
+def test_long_context_variants():
+    # sub-quadratic archs run natively; dense archs get the SWA variant
+    assert is_subquadratic(get_config("recurrentgemma-9b"))
+    assert is_subquadratic(get_config("xlstm-1.3b"))
+    for name in ("granite-20b", "yi-6b", "qwen2-72b", "llama4-scout-17b-a16e"):
+        v = long_context_variant(get_config(name))
+        assert v.window_size > 0 and "attn" not in v.pattern, name
+    v = long_context_variant(get_config("recurrentgemma-9b"))
+    assert v.name == "recurrentgemma-9b"  # unchanged
+
+
+def test_param_counts_match_scale():
+    """Config param counts land near the advertised model scale."""
+    approx = {
+        "qwen2-0.5b": 0.5e9, "yi-6b": 6e9, "qwen2-72b": 72e9,
+        "granite-20b": 20e9, "recurrentgemma-9b": 9e9, "xlstm-1.3b": 1.3e9,
+    }
+    for name, n in approx.items():
+        got = n_params(get_config(name))
+        assert 0.55 * n < got < 1.7 * n, (name, got, n)
+
+
+def test_moe_active_params():
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    total, active = n_params(phi), n_active_params(phi)
+    assert 35e9 < total < 50e9, total
+    assert 4e9 < active < 10e9, active  # a6.6b
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+@pytest.mark.parametrize("shape", sorted(INPUT_SHAPES))
+def test_batch_struct_shapes(arch, shape):
+    cfg, sh = get_config(arch), INPUT_SHAPES[shape]
+    if not supports_shape(cfg, shape):
+        return
+    bs = T.batch_struct(cfg, sh)
+    B = sh.global_batch
+    if sh.kind == "decode":
+        assert bs["tokens"].shape == (B, 1)
+        return
+    total = 0
+    for k, v in bs.items():
+        assert v.shape[0] == B, (k, v.shape)
+        if k in ("tokens", "frames", "patches"):
+            total += v.shape[1]
+    assert total == sh.seq_len  # patches + text = full sequence budget
+
+
+# ---------------------------------------------------------------------------
+# Sharding properties
+# ---------------------------------------------------------------------------
+
+
+def test_paper_faithful_rules_replicate_dense():
+    """Under PAPER_FAITHFUL_RULES only the vocab/table rows use 'model'."""
+    defs = lm_param_defs(get_config("yi-6b"))
+    specs = partition_specs(defs, PAPER_FAITHFUL_RULES)
+    flatd = jax.tree_util.tree_flatten_with_path(
+        defs, is_leaf=lambda x: hasattr(x, "logical_axes"))[0]
+    flats = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    for (pth, d), (_, s) in zip(flatd, flats):
+        axes = [a for e in s for a in ((e,) if isinstance(e, str) else (e or ()))]
+        if "vocab" in d.logical_axes:
+            assert "model" in axes
+        else:
+            assert "model" not in axes, (pth, s)
+
+
+class _FakeMesh:
+    shape = {"data": 16, "model": 16, "pod": 2}
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    dims=st.lists(st.sampled_from([1, 2, 3, 5, 16, 32, 48, 256]),
+                  min_size=1, max_size=4),
+)
+def test_fit_spec_never_violates_divisibility(dims):
+    spec = P(*(["data", "model", ("pod", "data"), None][: len(dims)]))
+    out = fit_spec_to_shape(spec, tuple(dims), _FakeMesh)
+    for dim, e in zip(dims, list(out) + [None] * (len(dims) - len(out))):
+        axes = (e,) if isinstance(e, str) else (e or ())
+        prod = 1
+        for a in axes:
+            prod *= _FakeMesh.shape[a]
+        assert dim % prod == 0
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_fsdp_specs_divide_shapes(arch):
+    """Every FSDP spec must evenly divide its tensor on a 16x16 mesh."""
+    cfg = get_config(arch)
+    defs = lm_param_defs(cfg)
+    specs = fsdp_specs(defs, DEFAULT_RULES, data_axes=("data",), data_size=16)
+    sizes = {"data": 16, "model": 16}
+    flatd = jax.tree.leaves(defs, is_leaf=lambda x: hasattr(x, "logical_axes"))
+    flats = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    n_data_sharded = 0
+    for d, s in zip(flatd, flats):
+        entries = list(s) + [None] * (len(d.shape) - len(s))
+        for dim, e in zip(d.shape, entries):
+            axes = (e,) if isinstance(e, str) else (e or ())
+            prod = int(np.prod([sizes[a] for a in axes])) if axes else 1
+            assert dim % prod == 0, (arch, d.shape, s)
+        if any("data" in ((e,) if isinstance(e, str) else (e or ()))
+               for e in entries):
+            n_data_sharded += 1
+    # the big tensors must actually be sharded over data
+    assert n_data_sharded > 0, arch
+
+
+# ---------------------------------------------------------------------------
+# Cost model sanity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+@pytest.mark.parametrize("shape", sorted(INPUT_SHAPES))
+def test_cost_model_positive_and_consistent(arch, shape):
+    cfg, sh = get_config(arch), INPUT_SHAPES[shape]
+    if not supports_shape(cfg, shape):
+        return
+    if shape == "long_500k":
+        cfg = long_context_variant(cfg)
+    plan = ParallelPlan(chips=256, data=16, model=16, accum_steps=4)
+    c = step_cost(cfg, sh, plan)
+    assert c.flops_global > 0 and c.hbm_bytes_dev > 0
+    assert c.n_active <= c.n_params
+    t = c.terms(plan)
+    assert t["dominant"] in ("compute", "memory", "collective")
+    assert t["useful_ratio"] > 0
+    if sh.kind == "train" and not cfg.num_experts and cfg.arch_type == "dense":
+        # dense train: modelled flops within ~3x of 6ND (attention adds work,
+        # remat adds 1/3)
+        assert 0.3 < t["useful_ratio"] < 1.2, (arch, shape, t["useful_ratio"])
+
+
+def test_cost_model_train_flops_scale_with_remat():
+    cfg = get_config("yi-6b")
+    sh = INPUT_SHAPES["train_4k"]
+    plan = ParallelPlan()
+    with_remat = step_cost(cfg, sh, plan).flops_global
+    without = step_cost(dataclasses.replace(cfg, remat=False), sh, plan).flops_global
+    assert abs(with_remat / without - 4 / 3) < 1e-6
+
+
+def test_cost_model_decode_memory_bound():
+    """decode_32k on a dense arch must be memory-dominated (KV-cache reads)."""
+    cfg = get_config("yi-6b")
+    c = step_cost(cfg, INPUT_SHAPES["decode_32k"], ParallelPlan())
+    assert c.terms(ParallelPlan())["dominant"] in ("memory", "collective")

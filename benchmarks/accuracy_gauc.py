@@ -5,11 +5,14 @@ The paper's claim: MTGRBoost's dynamic tables train to the same GAUC
 trajectory as the baseline (correctness), while the static table degrades
 when feature IDs overflow its capacity (default-embedding fallback, §4.1).
 We reproduce both: parity on ample capacity, degradation under overflow.
+
+With the unified EmbeddingEngine the two systems are the SAME trainer — only
+the `EngineConfig.backend` string differs (the facade's whole point).
 """
 from __future__ import annotations
 
 import tempfile
-from typing import Dict, List
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -17,13 +20,12 @@ import numpy as np
 
 from benchmarks.common import Table
 from repro.configs.registry import ARCHS
-from repro.core import static_table as stt
-from repro.core.table_merging import FeatureConfig, HashTableCollection
 from repro.data import synth
 from repro.data.pipeline import make_input_pipeline
+from repro.embedding import EmbeddingEngine, EngineConfig
 from repro.optim.adam import Adam
 from repro.optim.rowwise_adam import RowwiseAdam
-from repro.train.grm_trainer import GRMTrainer
+from repro.train.grm_trainer import GRMTrainer, default_grm_features
 
 
 def gauc(user_ids: np.ndarray, labels: np.ndarray, scores: np.ndarray) -> float:
@@ -44,34 +46,19 @@ def gauc(user_ids: np.ndarray, labels: np.ndarray, scores: np.ndarray) -> float:
     return total / max(total_w, 1.0)
 
 
-def _train_and_eval(use_static: bool, steps: int, static_capacity: int = 0) -> Dict:
+def _train_and_eval(backend: str, steps: int, static_capacity: int = 0) -> Dict:
     cfg = ARCHS["grm-4g"].reduced()
     scfg = synth.SynthConfig(num_users=40, num_items=800, avg_len=48,
                              max_len=160, seed=11)
-    feats = (FeatureConfig("item", cfg.d_model), FeatureConfig("user", cfg.d_model))
-    coll = HashTableCollection(feats, jax.random.PRNGKey(0), capacity=1 << 12,
-                               chunk_rows=512)
-    tr = GRMTrainer(cfg=cfg, features=coll, dense_opt=Adam(lr=3e-3),
-                    sparse_opt=RowwiseAdam(lr=5e-2), accum_batches=1)
-    if use_static:
-        # swap the lookup path: IDs overflowing capacity hit the default row
-        st_cfg = stt.StaticTableConfig(capacity=static_capacity, embed_dim=cfg.d_model)
-        st_state = stt.create(st_cfg, jax.random.PRNGKey(1))
-        table_name = next(iter(coll.tables))
-
-        def static_step(batch):
-            ids = jnp.asarray(batch["item_ids"])
-            # static tables index raw ids directly (no hashing)
-            rows = jnp.where((ids >= 0) & (ids < st_cfg.capacity), ids,
-                             st_cfg.capacity).astype(jnp.int32)
-            from repro.train.grm_trainer import _grm_step
-            loss, m, dgrads, egrads = jax.jit(
-                lambda dp, emb, r, l, mk: _grm_step(dp, emb, r, l, mk, cfg=cfg)
-            )(tr.dense_params, st_state.emb, rows,
-              jnp.asarray(batch["labels"]), jnp.asarray(batch["mask"]))
-            tr.dense_params, tr.dense_opt_state = tr.dense_opt.update(
-                dgrads, tr.dense_opt_state, tr.dense_params)
-            return float(loss)
+    engine = EmbeddingEngine(
+        default_grm_features(cfg.d_model),
+        EngineConfig(backend=backend, capacity=1 << 12, chunk_rows=512,
+                     static_capacity=static_capacity or (1 << 20),
+                     accum_batches=1),
+        jax.random.PRNGKey(0),
+        sparse_opt=RowwiseAdam(lr=5e-2),
+    )
+    tr = GRMTrainer(cfg=cfg, engine=engine, dense_opt=Adam(lr=3e-3))
 
     with tempfile.TemporaryDirectory() as d:
         paths = synth.write_shards(scfg, d, num_shards=2, samples_per_shard=80)
@@ -83,26 +70,16 @@ def _train_and_eval(use_static: bool, steps: int, static_capacity: int = 0) -> D
             if i >= steps:
                 break
             batches.append(batch)
-            if use_static:
-                losses.append(static_step(batch))
-            else:
-                losses.append(tr.train_step(batch)["loss"])
+            losses.append(tr.train_step(batch)["loss"])
 
-        # eval GAUC on the last few batches
+        # eval GAUC on the last few batches (same forward as training:
+        # item sequence + mean-pooled contextual user embedding)
         users, ys, ss = [], [[], []], [[], []]
         from repro.models.grm import grm_apply
         for batch in batches[-4:]:
-            if use_static:
-                ids = jnp.asarray(batch["item_ids"])
-                rows = jnp.where((ids >= 0) & (ids < st_cfg.capacity), ids,
-                                 st_cfg.capacity).astype(jnp.int32)
-                emb = st_state.emb[rows]
-            else:
-                tn, gids = tr.features.global_ids("item", jnp.asarray(batch["item_ids"]))
-                tbl = tr.features.tables[tn]
-                rows = tbl.find_rows(gids.reshape(-1)).reshape(gids.shape)
-                emb = jnp.where((rows >= 0)[..., None],
-                                tbl.state.emb[jnp.clip(rows, 0)], 0.0)
+            vecs, _ = engine.lookup(engine.batch_features(batch))
+            ctx = jnp.mean(vecs["user"], axis=-2)
+            emb = vecs["item"] + ctx[:, None, :]
             mask = jnp.asarray(batch["mask"])
             logits = grm_apply(tr.dense_params, emb.astype(jnp.float32), mask, cfg)
             m = np.asarray(mask)
@@ -125,13 +102,13 @@ def _train_and_eval(use_static: bool, steps: int, static_capacity: int = 0) -> D
 def run(steps: int = 10) -> Table:
     t = Table("fig11_gauc_parity",
               ["system", "loss_first", "loss_last", "gauc_ctr", "gauc_ctcvr"])
-    dyn = _train_and_eval(False, steps)
+    dyn = _train_and_eval("local-dynamic", steps)
     t.add("dynamic_table", dyn["loss_first"], dyn["loss_last"],
           dyn["gauc_ctr"], dyn["gauc_ctcvr"])
-    st_ok = _train_and_eval(True, steps, static_capacity=1 << 20)  # ample
+    st_ok = _train_and_eval("local-static", steps)  # ample capacity
     t.add("static_ample", st_ok["loss_first"], st_ok["loss_last"],
           st_ok["gauc_ctr"], st_ok["gauc_ctcvr"])
-    st_small = _train_and_eval(True, steps, static_capacity=64)  # overflow
+    st_small = _train_and_eval("local-static", steps, static_capacity=64)
     t.add("static_overflow", st_small["loss_first"], st_small["loss_last"],
           st_small["gauc_ctr"], st_small["gauc_ctcvr"])
     return t

@@ -1,5 +1,7 @@
 """Fig. 16 worker: four dedup strategies on a simulated (1 data × 4 model)
-mesh. Prints CSV: strategy,ids_sent,lookups,emb_bytes,wall_us.
+mesh, driven through the `EmbeddingEngine` sharded-dynamic backend (the
+dedup toggles are `EngineConfig` fields — one facade, four strategies).
+Prints CSV: strategy,ids_sent,lookups,emb_bytes,wall_us.
 
 NOTE: this container has ONE cpu core — multi-device emulation serializes
 collectives, so wall_us is emulation-bound and reported only as a sanity
@@ -18,27 +20,16 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro.core import hashtable as ht
-from repro.core import sharded_embedding as se
+from repro.common import compat
+from repro.embedding import EmbeddingEngine, EngineConfig, FeatureConfig
 
 
 def main(dim: int, dup_rate: float):
-    mesh = jax.make_mesh((1, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    tcfg = ht.HashTableConfig(capacity=1 << 11, embed_dim=dim, chunk_rows=512)
+    mesh = compat.make_mesh((1, 4), ("data", "model"))
     rng = np.random.default_rng(0)
     n_unique = 1024
     universe = rng.integers(0, 10**9, n_unique).astype(np.int64)
-    own = np.asarray(ht.murmur3_fmix64(jnp.asarray(universe)) % np.uint64(4)).astype(int)
-    tables = [ht.DynamicHashTable(tcfg, jax.random.PRNGKey(i)) for i in range(4)]
-    for s in range(4):
-        mine = universe[own == s]
-        if len(mine):
-            tables[s].insert(jnp.asarray(mine))
-    stacked = se.stack_table_shards(tables)
-    tcfg = tables[0].cfg
 
     # query batch with controlled duplicate rate (sequences repeat hot ids)
     B, S = 4, 128
@@ -51,19 +42,22 @@ def main(dim: int, dup_rate: float):
         ("lookup_only", False, True),
         ("none", False, False),
     ]:
-        cfg = se.LookupConfig(
-            num_shards=4, embed_dim=dim, local_unique_cap=B * S,
-            per_peer_cap=B * S, owner="hash",
-            dedup_stage1=d1, dedup_stage2=d2,
+        engine = EmbeddingEngine(
+            (FeatureConfig("item", dim),),
+            EngineConfig(
+                backend="sharded-dynamic", mesh=mesh, num_shards=4,
+                capacity=1 << 11, chunk_rows=512, row_stride=1 << 12,
+                dedup_stage1=d1, dedup_stage2=d2,
+            ),
+            jax.random.PRNGKey(0),
         )
-        fn = se.make_hash_lookup(cfg, tcfg, mesh, P("data", None))
-        with jax.set_mesh(mesh):
-            vecs, stats = fn(stacked, q)  # compile+warm
-            jax.block_until_ready(vecs)
-            t0 = time.perf_counter()
-            vecs, stats = fn(stacked, q)
-            jax.block_until_ready(vecs)
-            wall = time.perf_counter() - t0
+        engine.insert({"item": jnp.asarray(universe)})
+        vecs, stats = engine.lookup({"item": q})  # compile+warm
+        jax.block_until_ready(vecs["item"])
+        t0 = time.perf_counter()
+        vecs, stats = engine.lookup({"item": q})
+        jax.block_until_ready(vecs["item"])
+        wall = time.perf_counter() - t0
         emb_bytes = int(stats.ids_sent) * dim * 4 * 2  # fetch + grad return
         print(f"{name},{int(stats.ids_sent)},{int(stats.lookups)},"
               f"{emb_bytes},{wall * 1e6:.0f}")

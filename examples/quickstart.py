@@ -2,9 +2,10 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Covers: dynamic hash table (insert/lookup/expansion), automatic table
-merging via FeatureConfig, Eq. 8 global-ID encoding, two-stage dedup stats,
-and one GRM forward pass on the looked-up embeddings.
+Covers: the unified EmbeddingEngine facade (declare features once, pick a
+backend with one string), automatic table merging via FeatureConfig, fused
+multi-feature lookup with stats, two-stage dedup ratios, and one GRM forward
+pass on the looked-up embeddings.
 """
 import jax
 import jax.numpy as jnp
@@ -12,46 +13,56 @@ import numpy as np
 
 from repro.configs.registry import ARCHS
 from repro.common.params import init_params
-from repro.core import hashtable as ht
-from repro.core.dedup import dedup_ratio, unique_static
-from repro.core.table_merging import FeatureConfig, HashTableCollection
+from repro.core.dedup import dedup_ratio
+from repro.embedding import EmbeddingEngine, EngineConfig, FeatureConfig
 from repro.models.grm import grm_apply, grm_param_defs
 
 
 def main():
-    # --- 1. a dynamic hash table: insert arbitrary 64-bit feature IDs
-    cfg = ht.HashTableConfig(capacity=1 << 10, embed_dim=16, chunk_rows=256)
-    table = ht.DynamicHashTable(cfg, jax.random.PRNGKey(0))
-    ids = jnp.asarray(np.random.default_rng(0).integers(0, 10**12, 500), jnp.int64)
-    table.insert(ids)
-    vecs = table.lookup(ids)
-    print(f"dynamic table: {len(table)} entries, capacity {table.cfg.capacity} "
-          f"(auto-expanded), lookup -> {vecs.shape}")
-
-    # --- 2. automatic table merging: declare features, merging is derived
+    # --- 1. declare features once; merging + backend wiring are derived
     feats = (
         FeatureConfig("item_click", 32),
         FeatureConfig("item_purchase", 32, shared_table="item_click"),
         FeatureConfig("merchant", 32),
         FeatureConfig("user_profile", 64),
     )
-    coll = HashTableCollection(feats, jax.random.PRNGKey(1), capacity=1 << 10)
-    print("merged tables:", {s.name: s.members for s in coll.specs})
+    engine = EmbeddingEngine(
+        feats, EngineConfig(backend="local-dynamic", capacity=1 << 10,
+                            chunk_rows=256), jax.random.PRNGKey(0),
+    )
+    print("merged tables:",
+          {t: [f for f in engine.feature_names if engine.table_of(f) == t]
+           for t in engine.merged_tables})
 
+    # --- 2. fused lookup: unknown IDs insert on the fly (dynamic table,
+    # real-time path); ONE lookup op per merged table serves all its features
     batch = {
         "item_click": jnp.asarray([[1, 2, 3, 2, 1]], jnp.int64),
         "merchant": jnp.asarray([[7, 7, 7, 8, 9]], jnp.int64),
         "user_profile": jnp.asarray([[42]], jnp.int64),
     }
-    out = coll.lookup(batch)
+    out, stats = engine.lookup(batch)
     print("lookup:", {k: tuple(v.shape) for k, v in out.items()})
+    print(f"stats: {int(stats.ids_before_dedup)} ids -> "
+          f"{int(stats.lookups)} unique probes "
+          f"(table sizes {engine.table_sizes()})")
 
-    # --- 3. two-stage dedup: the duplicate mass the paper exploits
+    # --- 3. the engine also owns the sparse update path (§5.2): feed
+    # per-slot gradients back through the same row handles
+    rows = engine.insert({"merchant": batch["merchant"]})
+    engine.apply_grads(
+        {"merchant": rows["merchant"]},
+        {"merchant": jnp.ones(rows["merchant"].shape + (32,), jnp.float32)},
+    )
+    print("rowwise-Adam update applied to",
+          engine.table_of("merchant"))
+
+    # --- 4. two-stage dedup: the duplicate mass the paper exploits
     seq = jnp.asarray(np.random.default_rng(1).choice([1, 2, 3, 4, 5], 64), jnp.int64)
     print(f"dedup ratio on a hot sequence: {float(dedup_ratio(seq)):.2f} "
           f"(fraction of IDs that are redundant)")
 
-    # --- 4. GRM forward on looked-up embeddings
+    # --- 5. GRM forward on looked-up embeddings
     gcfg = ARCHS["grm-4g"].reduced()
     params = init_params(jax.random.PRNGKey(2), grm_param_defs(gcfg))
     emb = jnp.zeros((1, 32, gcfg.d_model), jnp.float32)

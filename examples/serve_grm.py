@@ -6,7 +6,7 @@ various services").
 
 Request flow (mirrors training's Fig. 5, minus backward):
   requests (variable-length sequences) -> token-budget batching (the same
-  Algorithm 1 machinery balances *serving* batches) -> dynamic-table lookup
+  Algorithm 1 machinery balances *serving* batches) -> EmbeddingEngine lookup
   (unknown IDs get fresh embeddings — the real-time insert path) -> HSTU +
   MMoE forward -> per-position CTR/CTCVR scores for the exposed items.
 """
@@ -19,10 +19,11 @@ import numpy as np
 
 from repro.configs.registry import ARCHS
 from repro.common.params import init_params
-from repro.core.table_merging import FeatureConfig, HashTableCollection
 from repro.data import synth
 from repro.data.sequence_balancing import DynamicSequenceBatcher, pad_batch
+from repro.embedding import EmbeddingEngine, EngineConfig
 from repro.models.grm import grm_apply, grm_param_defs
+from repro.train.grm_trainer import default_grm_features
 
 
 def main():
@@ -32,9 +33,11 @@ def main():
     args = ap.parse_args()
 
     cfg = ARCHS["grm-4g"].reduced()
-    feats = (FeatureConfig("item", cfg.d_model), FeatureConfig("user", cfg.d_model))
-    coll = HashTableCollection(feats, jax.random.PRNGKey(0), capacity=1 << 12,
-                               chunk_rows=512)
+    engine = EmbeddingEngine(
+        default_grm_features(cfg.d_model),
+        EngineConfig(backend="local-dynamic", capacity=1 << 12, chunk_rows=512),
+        jax.random.PRNGKey(0),
+    )
     params = init_params(jax.random.PRNGKey(1), grm_param_defs(cfg))
 
     scfg = synth.SynthConfig(num_users=100, num_items=2000,
@@ -54,23 +57,19 @@ def main():
     served = 0
     for batch_samples in batcher.batches([requests]):
         batch = pad_batch(batch_samples, 0, bucket=64)
-        ids = jnp.asarray(batch["item_ids"])
         mask = jnp.asarray(batch["mask"])
         # dynamic table: unknown items get embeddings on the fly
-        table, gids = coll.global_ids("item", ids)
-        tbl = coll.tables[table]
-        tbl.insert(gids.reshape(-1))
-        rows = tbl.find_rows(gids.reshape(-1)).reshape(gids.shape)
-        emb = jnp.where((rows >= 0)[..., None],
-                        tbl.state.emb[jnp.clip(rows, 0)], 0.0)
-        scores = score_fn(params, emb.astype(jnp.float32), mask)
+        vecs, _ = engine.lookup({"item": jnp.asarray(batch["item_ids"])},
+                                with_stats=False)
+        scores = score_fn(params, vecs["item"].astype(jnp.float32), mask)
         served += len(batch_samples)
         ctr = float(jnp.mean(jnp.where(mask[..., None], scores, 0)[..., 0]))
         print(f"batch of {len(batch_samples):3d} requests "
               f"({int(batch['tokens'])} tokens) -> mean CTR score {ctr:.4f}")
     dt = time.time() - t0
+    entries = next(iter(engine.table_sizes().values()))
     print(f"served {served} requests in {dt:.2f}s "
-          f"({served / dt:.1f} req/s, table={len(tbl)} entries)")
+          f"({served / dt:.1f} req/s, table={entries} entries)")
     print("OK")
 
 

@@ -4,9 +4,13 @@
     PYTHONPATH=src python examples/train_grm.py --steps 300 --full  # ~100M
 
 Pipeline: synthetic long-tail Hive-style shards -> balanced batches
-(Algorithm 1) -> merged dynamic hash tables (real-time ID inserts) -> HSTU +
-MMoE dense stack -> sparse grad accumulation + rowwise Adam / dense Adam ->
-periodic elastic checkpoints.
+(Algorithm 1) -> EmbeddingEngine (merged dynamic hash tables, real-time ID
+inserts, for the item AND contextual user features) -> HSTU + MMoE dense
+stack -> engine-side sparse grad accumulation + rowwise Adam / dense Adam ->
+periodic elastic checkpoints (engine shards + dense params).
+
+Swap `--backend local-static` to train against the TorchRec-style fixed
+table the paper replaces — same trainer, one flag.
 """
 import argparse
 import os
@@ -18,12 +22,12 @@ import numpy as np
 
 from repro.ckpt import checkpoint as C
 from repro.configs.registry import ARCHS
-from repro.core.table_merging import FeatureConfig, HashTableCollection
 from repro.data import synth
 from repro.data.pipeline import make_input_pipeline
+from repro.embedding import EmbeddingEngine, EngineConfig
 from repro.optim.adam import Adam
 from repro.optim.rowwise_adam import RowwiseAdam
-from repro.train.grm_trainer import GRMTrainer
+from repro.train.grm_trainer import GRMTrainer, default_grm_features
 
 
 def main():
@@ -31,6 +35,8 @@ def main():
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--full", action="store_true",
                     help="full GRM-4G dims (~100M params incl. embeddings)")
+    ap.add_argument("--backend", default="local-dynamic",
+                    choices=["local-dynamic", "local-static"])
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--workdir", default=None)
     args = ap.parse_args()
@@ -42,15 +48,19 @@ def main():
         num_items=200_000 if args.full else 1000,
         avg_len=avg_len, max_len=avg_len * 5, seed=0,
     )
-    feats = (FeatureConfig("item", cfg.d_model), FeatureConfig("user", cfg.d_model))
-    coll = HashTableCollection(feats, jax.random.PRNGKey(0),
-                               capacity=1 << (16 if args.full else 12),
-                               chunk_rows=4096 if args.full else 512)
-    trainer = GRMTrainer(
-        cfg=cfg, features=coll,
-        dense_opt=Adam(lr=1e-3), sparse_opt=RowwiseAdam(lr=2e-2),
-        accum_batches=2,
+    engine = EmbeddingEngine(
+        default_grm_features(cfg.d_model),
+        EngineConfig(
+            backend=args.backend,
+            capacity=1 << (16 if args.full else 12),
+            chunk_rows=4096 if args.full else 512,
+            static_capacity=scfg.num_items,
+            accum_batches=2,
+        ),
+        jax.random.PRNGKey(0),
+        sparse_opt=RowwiseAdam(lr=2e-2),
     )
+    trainer = GRMTrainer(cfg=cfg, engine=engine, dense_opt=Adam(lr=1e-3))
 
     workdir = args.workdir or tempfile.mkdtemp(prefix="grm_")
     data_dir = os.path.join(workdir, "shards")
@@ -80,19 +90,16 @@ def main():
     ):
         tok_seen += int(batch["tokens"])
         if step % 5 == 0 or step == args.steps - 1:
-            tbl = coll.tables[next(iter(coll.tables))]
+            entries = next(iter(engine.table_sizes().values()))
             print(f"step {step:4d} loss {m['loss']:.4f} "
                   f"batch {int(batch['batch_size'])} "
-                  f"table_entries {len(tbl)} "
+                  f"table_entries {entries} "
                   f"tok/s {tok_seen / (time.time() - t0):.0f}")
         if args.ckpt_every and step and step % args.ckpt_every == 0:
             C.save_dense(ckpt_dir, step,
                          {"params": trainer.dense_params,
                           "opt": trainer.dense_opt_state})
-            for name, tbl in coll.tables.items():
-                C.save_sparse_shard(ckpt_dir, step, 0, 1,
-                                    {"state": tbl.state._asdict()})
-            C.write_meta(ckpt_dir, step, {"num_devices": 1})
+            engine.save(ckpt_dir, step)
             print(f"  checkpoint @ step {step} -> {ckpt_dir}")
     print("done.")
 

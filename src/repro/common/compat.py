@@ -1,0 +1,57 @@
+"""jax version compatibility shims (single-source, import-light).
+
+The repo targets current jax (`jax.shard_map`, `jax.set_mesh`,
+`jax.sharding.AxisType`), but CI and the dev container may pin an older
+0.4.x where those live under `jax.experimental` or do not exist. Every
+mesh/shard_map touchpoint routes through here so the rest of the codebase
+writes the modern spelling once.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None):
+    """`jax.shard_map` when present, else the experimental fallback.
+
+    Replication checking is disabled either way (`check_vma`/`check_rep`):
+    the lookup kernels psum their stats to replicated outputs, which the
+    older checker cannot verify through `all_to_all`. `axis_names` (modern:
+    the axes the body is manual over) maps to the older inverse `auto=`
+    parameter (the axes it is NOT manual over).
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {} if axis_names is None else {"axis_names": set(axis_names)}
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False, **kwargs
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    kwargs = {}
+    if axis_names is not None:
+        kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False, **kwargs)
+
+
+def set_mesh(mesh: Mesh):
+    """Context manager activating `mesh`: `jax.set_mesh` on current jax,
+    the Mesh-as-context-manager protocol on older releases."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # Mesh is itself a context manager pre-set_mesh
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    """Explicit-axis mesh; `axis_types=Auto` where the API supports it."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    return jax.make_mesh(tuple(shape), tuple(axes))

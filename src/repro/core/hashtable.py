@@ -414,7 +414,9 @@ def evict(
         timestamps=timestamps, next_row=n_live.astype(jnp.int32),
         size=state.size - evicted,
     )
-    return new_state, evicted
+    # (survive, new_index) lets row-indexed side state (e.g. rowwise optimizer
+    # moments) follow the compaction instead of being orphaned.
+    return new_state, evicted, (survive, new_index)
 
 
 # ---------------------------------------------------------------------------
@@ -433,6 +435,7 @@ class DynamicHashTable:
     def __init__(self, cfg: HashTableConfig, key: Optional[jax.Array] = None):
         self.cfg = cfg
         self.state = create(cfg, key)
+        self.last_remap = None  # (survive, new_index) of the latest eviction
 
     def insert(self, ids: jax.Array) -> jax.Array:
         for _attempt in range(16):
@@ -470,8 +473,11 @@ class DynamicHashTable:
         return find_rows(self.state, ids, self.cfg)
 
     def evict(self, n: int, policy: str = "lfu", step: int = 0) -> int:
-        """Evict the n coldest entries (host-cadence, like expansion)."""
-        self.state, count = evict(self.state, self.cfg, n, policy, step)
+        """Evict the n coldest entries (host-cadence, like expansion).
+
+        `self.last_remap` holds the (survive, new_index) row compaction of the
+        most recent eviction so row-indexed side state can be migrated."""
+        self.state, count, self.last_remap = evict(self.state, self.cfg, n, policy, step)
         return int(count)
 
     def __len__(self) -> int:

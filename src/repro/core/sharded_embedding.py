@@ -27,12 +27,13 @@ update path for sparse embeddings (§3, 'Backward Update').
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.common import compat
 from repro.core import hashtable as ht
 from repro.core.dedup import PAD_ID, unique_static
 
@@ -179,8 +180,6 @@ def make_vocab_lookup(cfg: LookupConfig, mesh: Mesh, batch_spec: P):
     w.r.t. `table` (backward = reverse all-to-all + scatter-add on the shard).
     """
     assert cfg.owner == "block"
-
-    assert cfg.owner == "block"
     axis_names = tuple(mesh.axis_names)
 
     def device_fn(table_shard: jax.Array, ids: jax.Array):
@@ -197,12 +196,11 @@ def make_vocab_lookup(cfg: LookupConfig, mesh: Mesh, batch_spec: P):
         stats = jax.tree.map(lambda x: jax.lax.psum(x, axis_names), stats)
         return vecs.reshape(shape + (cfg.embed_dim,)), stats
 
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         device_fn,
         mesh=mesh,
         in_specs=(P(cfg.axis), batch_spec),
         out_specs=(batch_spec, LookupStats(P(), P(), P(), P())),
-        check_vma=False,
     )
     return mapped
 
@@ -236,12 +234,11 @@ def make_hash_lookup(cfg: LookupConfig, table_cfg: ht.HashTableConfig, mesh: Mes
         counters=P(cfg.axis), timestamps=P(cfg.axis),
         next_row=P(cfg.axis), size=P(cfg.axis),
     )
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         device_fn,
         mesh=mesh,
         in_specs=(state_specs, batch_spec),
         out_specs=(batch_spec, LookupStats(P(), P(), P(), P())),
-        check_vma=False,
     )
     return mapped
 

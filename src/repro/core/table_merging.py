@@ -80,6 +80,62 @@ def plan_merges(features: Sequence[FeatureConfig]) -> List[MergedTableSpec]:
     return out
 
 
+def logical_groups(features: Sequence[FeatureConfig]) -> Dict[str, FeatureConfig]:
+    """Logical table name -> representative feature (shared tables collapse).
+
+    The grouping used by backends that index raw IDs directly (static /
+    vocab) and therefore never merge across features; dim/dtype agreement
+    between sharers is validated like `plan_merges`.
+    """
+    out: Dict[str, FeatureConfig] = {}
+    for f in features:
+        logical = f.shared_table or f.name
+        if logical in out:
+            have = out[logical]
+            if (have.embed_dim, have.dtype) != (f.embed_dim, f.dtype):
+                raise ValueError(
+                    f"feature {f.name!r} shares table {logical!r} with mismatched dim/dtype"
+                )
+        else:
+            out[logical] = f
+    return out
+
+
+class MergeIndex:
+    """Eq. 8 bookkeeping shared by every dynamic backend: merged specs,
+    feature -> (merged table, member index, id bits), global-ID encoding,
+    and per-merged-table bucketing of a feature batch."""
+
+    def __init__(self, features: Sequence[FeatureConfig]):
+        self.features: Dict[str, FeatureConfig] = {f.name: f for f in features}
+        self.specs = plan_merges(features)
+        self._logical = {f.name: (f.shared_table or f.name) for f in features}
+        self._member_index: Dict[str, Tuple[str, int, int]] = {}
+        for spec in self.specs:
+            for i, member in enumerate(spec.members):
+                self._member_index[member] = (spec.name, i, spec.id_bits)
+
+    def table_names(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self.specs)
+
+    def table_of(self, feature: str) -> str:
+        return self._member_index[self._logical[feature]][0]
+
+    def global_ids(self, feature: str, ids: jax.Array) -> Tuple[str, jax.Array]:
+        table, idx, bits = self._member_index[self._logical[feature]]
+        return table, encode_ids(idx, ids, bits)
+
+    def bucket(
+        self, feats: Dict[str, jax.Array]
+    ) -> Dict[str, List[Tuple[str, jax.Array]]]:
+        """Group encoded IDs per merged table => ONE fused op per table."""
+        per_table: Dict[str, List[Tuple[str, jax.Array]]] = {}
+        for name, ids in feats.items():
+            table, gids = self.global_ids(name, jnp.asarray(ids))
+            per_table.setdefault(table, []).append((name, gids))
+        return per_table
+
+
 def encode_ids(table_index: int, ids: jax.Array, id_bits: int) -> jax.Array:
     """Eq. 8: globally unique ID = (i << (63 - k)) | x.
 
@@ -118,13 +174,10 @@ class HashTableCollection:
         capacity: int = 1 << 16,
         chunk_rows: int = 4096,
     ):
-        self.features = {f.name: f for f in features}
-        self.specs = plan_merges(features)
-        self._logical_of = {
-            f.name: (f.shared_table or f.name) for f in features
-        }
+        self.index = MergeIndex(features)
+        self.features = self.index.features
+        self.specs = self.index.specs
         self.tables: Dict[str, ht.DynamicHashTable] = {}
-        self._member_index: Dict[str, Tuple[str, int, int]] = {}
         keys = jax.random.split(key, max(1, len(self.specs)))
         for spec, k in zip(self.specs, keys):
             cfg = ht.HashTableConfig(
@@ -134,12 +187,9 @@ class HashTableCollection:
                 dtype=jnp.dtype(spec.dtype),
             )
             self.tables[spec.name] = ht.DynamicHashTable(cfg, k)
-            for i, member in enumerate(spec.members):
-                self._member_index[member] = (spec.name, i, spec.id_bits)
 
     def global_ids(self, feature: str, ids: jax.Array) -> Tuple[str, jax.Array]:
-        table, idx, bits = self._member_index[self._logical_of[feature]]
-        return table, encode_ids(idx, ids, bits)
+        return self.index.global_ids(feature, ids)
 
     def lookup(self, batch: Dict[str, jax.Array], step: int = 0) -> Dict[str, jax.Array]:
         """batch: feature name -> int64 ID array (any shape; -1 = padding).
@@ -148,10 +198,7 @@ class HashTableCollection:
         with their freshly initialized embeddings.
         """
         # Bucket features per merged table => ONE fused lookup per table.
-        per_table: Dict[str, List[Tuple[str, jax.Array]]] = {}
-        for name, ids in batch.items():
-            table, gids = self.global_ids(name, ids)
-            per_table.setdefault(table, []).append((name, gids))
+        per_table = self.index.bucket(batch)
 
         out: Dict[str, jax.Array] = {}
         for table, items in per_table.items():
@@ -175,4 +222,7 @@ class HashTableCollection:
         return out
 
     def table_of(self, feature: str) -> ht.DynamicHashTable:
-        return self.tables[self._member_index[self._logical_of[feature]][0]]
+        return self.tables[self.table_name_of(feature)]
+
+    def table_name_of(self, feature: str) -> str:
+        return self.index.table_of(feature)

@@ -1,0 +1,34 @@
+"""Unified embedding engine (paper §4): one facade, four backends.
+
+    from repro.embedding import EmbeddingEngine, EngineConfig, FeatureConfig
+
+    engine = EmbeddingEngine(
+        (FeatureConfig("item", 64), FeatureConfig("user", 64)),
+        EngineConfig(backend="local-dynamic", capacity=1 << 16),
+        jax.random.PRNGKey(0),
+    )
+    rows = engine.insert({"item": item_ids, "user": user_ids})
+    vecs, stats = engine.lookup({"item": item_ids, "user": user_ids})
+
+See docs/embedding_engine.md for the protocol and the migration table from
+the previous three APIs (HashTableCollection / sharded lookups / static).
+"""
+from repro.embedding.base import BACKENDS, EngineConfig, FeatureConfig, LookupStats
+from repro.embedding.engine import EmbeddingEngine
+from repro.embedding.local_backends import LocalDynamicBackend, LocalStaticBackend
+from repro.embedding.sharded_backends import (
+    ShardedDynamicBackend,
+    ShardedVocabBackend,
+)
+
+__all__ = [
+    "BACKENDS",
+    "EmbeddingEngine",
+    "EngineConfig",
+    "FeatureConfig",
+    "LookupStats",
+    "LocalDynamicBackend",
+    "LocalStaticBackend",
+    "ShardedDynamicBackend",
+    "ShardedVocabBackend",
+]

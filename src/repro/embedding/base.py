@@ -1,0 +1,167 @@
+"""EmbeddingEngine protocol + configuration (the paper's unified sparse API).
+
+The paper's central systems claim (§4) is that generative-recommendation
+training scales once every sparse concern — dynamic hash tables (§4.1),
+automatic table merging (§4.2), two-stage dedup (§4.3), rowwise sparse
+updates (§5.2) — hides behind one declarative feature-configuration seam.
+This module defines that seam:
+
+  * `FeatureConfig` (re-exported from `core.table_merging`): one record per
+    feature; merging strategy is derived, never hand-written.
+  * `EngineConfig`: selects and sizes a *backend* — where the rows physically
+    live (single host vs a mesh) and how IDs map to rows (dynamic hash vs
+    static/contiguous).
+  * `EmbeddingBackend`: the protocol every backend implements. The
+    `EmbeddingEngine` facade (engine.py) adds the pieces shared by all
+    backends on top: per-feature pooling, sparse gradient accumulation,
+    rowwise Adam with moment migration, and checkpoint glue.
+
+Backends
+--------
+  local-dynamic   merged `DynamicHashTable`s on this host (HashTableCollection
+                  path) — the paper's default training configuration.
+  local-static    TorchRec-style fixed-capacity tables with a default-row
+                  fallback — the accuracy baseline the paper replaces.
+  sharded-dynamic model-parallel dynamic hash shards behind the two-stage
+                  dedup all-to-all lookup (`make_hash_lookup`).
+  sharded-vocab   a contiguous row-sharded vocab table (`make_vocab_lookup`).
+
+Row handles
+-----------
+Every backend resolves feature IDs to *row handles*: int32 indices into the
+dense array returned by `table_emb()`. Handles are what the jitted train step
+gathers with — O(batch) work, never O(table) — and what `apply_grads` scatters
+into. For sharded backends a handle is `shard * row_stride + local_row` with a
+fixed stride, so handles stay valid across chunked growth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Protocol, Tuple
+
+import jax
+
+from repro.core.sharded_embedding import LookupStats
+from repro.core.table_merging import FeatureConfig
+
+BACKENDS = ("local-dynamic", "local-static", "sharded-dynamic", "sharded-vocab")
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Backend selection + sizing for an `EmbeddingEngine`.
+
+    Only the fields relevant to the chosen backend are read; the rest keep
+    their defaults (mirrors how one launch config drives every parallelism
+    mode in the original system).
+    """
+
+    backend: str = "local-dynamic"
+
+    # dynamic-table sizing (local-dynamic / sharded-dynamic)
+    capacity: int = 1 << 16  # key slots per table (per shard when sharded)
+    chunk_rows: int = 4096  # embedding-structure chunk size
+
+    # static / vocab sizing (local-static / sharded-vocab)
+    static_capacity: int = 1 << 16  # rows before the default-row fallback
+    vocab_size: int = 0  # contiguous vocab rows (sharded-vocab)
+
+    # mesh placement (sharded-* only)
+    mesh: Optional[Any] = None  # jax.sharding.Mesh
+    num_shards: int = 1  # size of the model axis
+    model_axis: str = "model"
+    data_axis: str = "data"
+    row_stride: int = 1 << 16  # fixed rows-per-shard span in handle space
+    local_unique_cap: int = 0  # 0 => sized per batch
+    per_peer_cap: int = 0  # 0 => sized per batch
+    dedup_stage1: bool = True  # §4.3 toggles (Fig. 16 strategies)
+    dedup_stage2: bool = True
+
+    # sparse update behaviour (engine-owned, all backends)
+    accum_batches: int = 1  # §5.2 sparse gradient accumulation window
+
+    init_scale: float = 0.02
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of {BACKENDS}"
+            )
+        if self.backend.startswith("sharded") and self.mesh is None:
+            raise ValueError(f"backend {self.backend!r} requires a mesh")
+        if self.backend == "sharded-vocab" and self.vocab_size <= 0:
+            raise ValueError("sharded-vocab requires vocab_size > 0")
+
+
+class EmbeddingBackend(Protocol):
+    """What the facade needs from a storage backend.
+
+    All methods are host control-plane entry points; the data plane inside
+    them (probing, all-to-alls, gathers) is jitted per backend.
+    """
+
+    features: Dict[str, FeatureConfig]
+    num_shards: int
+
+    def table_names(self) -> Tuple[str, ...]:
+        """Merged/logical table names (one fused lookup per name)."""
+        ...
+
+    def table_of(self, feature: str) -> str:
+        """Which table a feature's rows live in."""
+        ...
+
+    def insert(self, feats: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        """Insert unseen IDs (real-time path; no-op for static backends) and
+        return per-feature row handles, same shape as the IDs, -1 = absent."""
+        ...
+
+    def rows_for(self, feature: str, ids: jax.Array) -> jax.Array:
+        """Read-only resolve: row handles without inserting."""
+        ...
+
+    def raw_lookup(
+        self, feats: Dict[str, jax.Array], step: int, with_stats: bool = True
+    ) -> Tuple[Dict[str, jax.Array], LookupStats]:
+        """Per-position embeddings (no pooling) + communication stats.
+        `with_stats=False` lets backends skip accounting that costs extra."""
+        ...
+
+    def table_emb(self, table: str) -> jax.Array:
+        """The dense (rows, d) array that row handles index."""
+        ...
+
+    def set_table_emb(self, table: str, emb: jax.Array) -> None:
+        """Write back an updated embedding array (post sparse update)."""
+        ...
+
+    def row_capacity(self, table: str) -> int:
+        """Rows in handle space (== table_emb(table).shape[0])."""
+        ...
+
+    def evict(self, n: int, policy: str, step: int) -> Dict[str, Tuple[int, Any]]:
+        """Evict per table; returns {table: (count, (survive, new_index))}.
+        Static/vocab backends return {} (nothing to evict)."""
+        ...
+
+    def shard_state_tree(self, shard: int) -> Any:
+        """Pytree of shard-local table state (checkpoint payload)."""
+        ...
+
+    def load_shard_state_tree(self, shard: int, tree: Any) -> None:
+        """Restore shard-local table state saved by `shard_state_tree`."""
+        ...
+
+    def nbytes(self) -> int:
+        """Total bytes held by table storage (benchmark accounting)."""
+        ...
+
+
+__all__ = [
+    "BACKENDS",
+    "EmbeddingBackend",
+    "EngineConfig",
+    "FeatureConfig",
+    "LookupStats",
+]

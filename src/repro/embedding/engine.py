@@ -1,0 +1,331 @@
+"""`EmbeddingEngine`: the unified facade over every sparse-embedding backend.
+
+This is the seam the paper's unified feature-configuration interface promises
+(§4.2): model and trainer code declare `FeatureConfig`s once, pick a backend
+with one `EngineConfig` string, and never name a hash table, a static table,
+or a shard_map again. Everything the old three APIs forced callers to
+hand-wire now lives behind six verbs:
+
+    engine.insert(batch)          # real-time ID admission -> row handles
+    engine.lookup(batch)          # fused per-merged-table lookup + pooling
+    engine.rows_for(feature, ids) # read-only resolve
+    engine.apply_grads(rows, g)   # §5.2: sparse accumulation + rowwise Adam
+    engine.evict(n, policy)       # §4.1 LFU/LRU with moment remapping
+    engine.save/load(dir, step)   # §5.2 elastic per-shard checkpoints
+
+The engine *owns* the sparse optimizer: per-table rowwise Adam states follow
+the tables through chunked growth (moments are migrated, never reset — the
+fix over the seed trainer's reset-on-growth) and through eviction compaction
+(moments move with their surviving rows).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint as C
+from repro.core import grad_accum as ga
+from repro.core.sharded_embedding import LookupStats
+from repro.core.table_merging import FeatureConfig
+from repro.optim.rowwise_adam import RowwiseAdam, RowwiseAdamState
+
+from repro.embedding.base import EngineConfig
+from repro.embedding.local_backends import LocalDynamicBackend, LocalStaticBackend
+from repro.embedding.sharded_backends import (
+    ShardedDynamicBackend,
+    ShardedVocabBackend,
+)
+
+_BACKEND_CLASSES = {
+    "local-dynamic": LocalDynamicBackend,
+    "local-static": LocalStaticBackend,
+    "sharded-dynamic": ShardedDynamicBackend,
+    "sharded-vocab": ShardedVocabBackend,
+}
+
+
+class EmbeddingEngine:
+    """One facade over local/sharded × dynamic/static embedding storage."""
+
+    def __init__(
+        self,
+        features: Sequence[FeatureConfig],
+        cfg: Optional[EngineConfig] = None,
+        key: Optional[jax.Array] = None,
+        sparse_opt: Optional[RowwiseAdam] = None,
+    ):
+        self.cfg = cfg or EngineConfig()
+        self.features: Dict[str, FeatureConfig] = {f.name: f for f in features}
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        self.backend = _BACKEND_CLASSES[self.cfg.backend](features, self.cfg, key)
+        self.sparse_opt = sparse_opt or RowwiseAdam()
+        self._opt_states: Dict[str, RowwiseAdamState] = {}
+        self._accums: Dict[str, ga.SparseGradAccum] = {}
+        self._accum_used: Dict[str, int] = {}  # host-side fill bound (no syncs)
+        self._accum_count = 0
+
+    # ------------------------------------------------------------------
+    # Topology
+    # ------------------------------------------------------------------
+
+    @property
+    def feature_names(self) -> Tuple[str, ...]:
+        return tuple(self.features)
+
+    @property
+    def merged_tables(self) -> Tuple[str, ...]:
+        """Logical tables after automatic merging — one fused lookup each."""
+        return self.backend.table_names()
+
+    def table_of(self, feature: str) -> str:
+        self._check(feature)
+        return self.backend.table_of(feature)
+
+    def _check(self, feature: str) -> None:
+        if feature not in self.features:
+            raise KeyError(
+                f"unknown feature {feature!r}; configured: {self.feature_names}"
+            )
+
+    def batch_features(self, batch: Dict) -> Dict[str, jax.Array]:
+        """Pull every configured feature out of a data-pipeline batch
+        (feature `f` reads batch key `f` or `f_ids`)."""
+        out = {}
+        for f in self.features:
+            if f in batch:
+                out[f] = jnp.asarray(batch[f])
+            elif f + "_ids" in batch:
+                out[f] = jnp.asarray(batch[f + "_ids"])
+        return out
+
+    # ------------------------------------------------------------------
+    # Forward path
+    # ------------------------------------------------------------------
+
+    def insert(self, feats: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        """Real-time ID admission (§4.1): insert unseen IDs, return int32 row
+        handles (same shape as the IDs; -1 = padding/absent). Handles index
+        `emb_of(feature)` — the O(batch) gather path for jitted train steps."""
+        for f in feats:
+            self._check(f)
+        return self.backend.insert(feats)
+
+    def rows_for(self, feature: str, ids: jax.Array) -> jax.Array:
+        """Read-only resolve (no insertion)."""
+        self._check(feature)
+        return self.backend.rows_for(feature, ids)
+
+    def emb_of(self, feature: str) -> jax.Array:
+        """The dense (rows, d) array that this feature's handles index."""
+        self._check(feature)
+        return self.backend.table_emb(self.backend.table_of(feature))
+
+    def lookup(
+        self, batch: Dict[str, jax.Array], step: int = 0, with_stats: bool = True
+    ) -> Tuple[Dict[str, jax.Array], LookupStats]:
+        """Fused lookup + per-feature pooling.
+
+        One lookup op per merged table for *all* features it hosts (§4.2).
+        Dynamic backends insert unknown IDs first (the real-time path);
+        static/vocab backends resolve only. Padding (-1) yields zero vectors.
+        `with_stats=False` skips the dedup accounting on local backends —
+        use it on hot loops that discard the stats.
+        """
+        feats = {f: jnp.asarray(ids) for f, ids in batch.items()}
+        for f in feats:
+            self._check(f)
+        if self.backend.dynamic:
+            self.backend.insert(feats)
+        raw, stats = self.backend.raw_lookup(feats, step, with_stats)
+        out = {}
+        for name, v in raw.items():
+            ids = feats[name]
+            pool = self.features[name].pooling
+            if pool == "sum":
+                v = jnp.sum(jnp.where((ids == -1)[..., None], 0, v), axis=-2)
+            elif pool == "mean":
+                valid = jnp.sum(ids != -1, axis=-1, keepdims=True)
+                v = jnp.sum(jnp.where((ids == -1)[..., None], 0, v), axis=-2)
+                v = v / jnp.maximum(valid, 1)
+            out[name] = v
+        return out, stats
+
+    # ------------------------------------------------------------------
+    # Backward path (§5.2: accumulation + rowwise Adam, engine-owned)
+    # ------------------------------------------------------------------
+
+    def apply_grads(
+        self, rows: Dict[str, jax.Array], grads: Dict[str, jax.Array]
+    ) -> None:
+        """Record one batch of per-slot embedding gradients.
+
+        `rows[f]` are the handles `insert`/`rows_for` returned (any shape);
+        `grads[f]` the matching per-slot gradients (shape + (d,)). Gradients
+        bucket per merged table, accumulate across `accum_batches` batches
+        (duplicate rows sum — "sparse aggregation"), then one rowwise-Adam
+        update touches only the activated rows.
+        """
+        per_table: Dict[str, Tuple[list, list]] = {}
+        for f, r in rows.items():
+            self._check(f)
+            g = grads[f]
+            t = self.backend.table_of(f)
+            bucket = per_table.setdefault(t, ([], []))
+            bucket[0].append(jnp.asarray(r).reshape(-1).astype(jnp.int32))
+            bucket[1].append(
+                jnp.asarray(g).reshape(-1, g.shape[-1]).astype(jnp.float32)
+            )
+        for t, (rs, gs) in per_table.items():
+            r = jnp.concatenate(rs)
+            g = jnp.concatenate(gs)
+            needed = r.shape[0] * max(1, self.cfg.accum_batches)
+            # `used` is a host-side upper bound on acc.fill (pad entries count
+            # too) so the overflow check never syncs with the device.
+            used = self._accum_used.get(t, 0)
+            acc = self._accums.get(t)
+            if acc is not None and acc.rows.shape[0] < used + r.shape[0]:
+                self._flush_table(t)  # would overflow: apply what we hold
+                used = 0
+                acc = self._accums.get(t)
+            if acc is None or acc.rows.shape[0] < needed:
+                acc = ga.init_accumulator(needed, g.shape[-1])
+            self._accums[t] = ga.accumulate(acc, r, g)
+            self._accum_used[t] = used + r.shape[0]
+        self._accum_count += 1
+        if self._accum_count >= self.cfg.accum_batches:
+            self.flush()
+
+    def flush(self) -> None:
+        """Apply all pending accumulated sparse gradients now."""
+        for t in list(self._accums):
+            self._flush_table(t)
+        self._accum_count = 0
+
+    def _flush_table(self, table: str) -> None:
+        acc = self._accums.get(table)
+        if acc is None or self._accum_used.get(table, 0) == 0:
+            return
+        uniq, summed, reset = ga.drain(acc, acc.rows.shape[0])
+        self._accums[table] = reset
+        self._accum_used[table] = 0
+        emb = self.backend.table_emb(table)
+        st = self._opt_state_for(table)
+        new_emb, st = self.sparse_opt.update(emb, st, uniq, summed)
+        self._opt_states[table] = st
+        self.backend.set_table_emb(table, new_emb)
+
+    def _opt_state_for(self, table: str) -> RowwiseAdamState:
+        """Rowwise state sized to the table's *current* row capacity; existing
+        moments are migrated across chunk/key expansion, never reset."""
+        rows = self.backend.row_capacity(table)
+        st = self._opt_states.get(table)
+        if st is None:
+            st = self.sparse_opt.init(rows)
+        elif st.mu.shape[0] != rows:
+            st = self.sparse_opt.migrate(st, rows)
+        self._opt_states[table] = st
+        return st
+
+    def opt_state(self, table: str) -> Optional[RowwiseAdamState]:
+        return self._opt_states.get(table)
+
+    # ------------------------------------------------------------------
+    # Eviction (§4.1)
+    # ------------------------------------------------------------------
+
+    def evict(self, n: int, policy: str = "lfu", step: int = 0) -> int:
+        """Evict the n coldest entries per table. Pending gradients flush
+        first (their handles predate the compaction) and surviving rows'
+        optimizer moments move with them."""
+        self.flush()
+        total = 0
+        for table, (count, remap) in self.backend.evict(n, policy, step).items():
+            total += count
+            st = self._opt_states.get(table)
+            if st is not None and remap is not None:
+                st = self._opt_state_for(table)
+                survive, new_index = remap
+                self._opt_states[table] = self.sparse_opt.remap(
+                    st, new_index, survive, self.backend.row_capacity(table)
+                )
+        return total
+
+    # ------------------------------------------------------------------
+    # Elastic checkpoints (§5.2) — delegates to repro/ckpt
+    # ------------------------------------------------------------------
+
+    def save(self, ckpt_dir: str, step: int) -> None:
+        """Per-shard independent saves (one `sparse_*.npz` per shard), table
+        state + rowwise optimizer state together."""
+        self.flush()  # pending grads are not serializable row handles
+        n = self.backend.num_shards
+        for t in self.backend.table_names():
+            self._opt_state_for(t)
+        for k in range(n):
+            opt_tree = {
+                t: {
+                    "step": st.step,
+                    "mu": self.backend.opt_rows_of_shard(k, st.mu),
+                    "nu": self.backend.opt_rows_of_shard(k, st.nu),
+                }
+                for t, st in self._opt_states.items()
+            }
+            C.save_sparse_shard(
+                ckpt_dir, step, k, n,
+                {"tables": self.backend.shard_state_tree(k), "opt": opt_tree},
+            )
+        C.write_meta(
+            ckpt_dir, step,
+            {"num_devices": n, "backend": self.cfg.backend,
+             "features": list(self.features)},
+        )
+
+    def load(self, ckpt_dir: str, step: int) -> None:
+        n = self.backend.num_shards
+        opt_parts = []
+        for k in range(n):
+            proto_opt = {
+                t: {
+                    "step": jnp.int32(0),
+                    "mu": jnp.zeros((1,), jnp.float32),
+                    "nu": jnp.zeros((1,), jnp.float32),
+                }
+                for t in self.backend.table_names()
+            }
+            tree = C.load_sparse_shard(
+                ckpt_dir, step, k, n,
+                {"tables": self.backend.shard_state_tree(k), "opt": proto_opt},
+                row_sharded=("tables", "opt/"),
+            )
+            self.backend.load_shard_state_tree(k, tree["tables"])
+            opt_parts.append(tree["opt"])
+        self._opt_states = {
+            t: RowwiseAdamState(
+                step=opt_parts[0][t]["step"],
+                mu=jnp.concatenate([p[t]["mu"] for p in opt_parts]),
+                nu=jnp.concatenate([p[t]["nu"] for p in opt_parts]),
+            )
+            for t in self.backend.table_names()
+        }
+        self._accums = {}
+        self._accum_used = {}
+        self._accum_count = 0
+
+    # ------------------------------------------------------------------
+
+    def nbytes(self) -> int:
+        """Bytes held by embedding storage (benchmark accounting)."""
+        return self.backend.nbytes()
+
+    def table_sizes(self) -> Dict[str, int]:
+        """Occupied entries per merged table (capacity for static backends)."""
+        return {t: self.backend.table_size(t) for t in self.merged_tables}
+
+    def __repr__(self) -> str:
+        return (
+            f"EmbeddingEngine(backend={self.cfg.backend!r}, "
+            f"features={list(self.features)}, tables={list(self.merged_tables)})"
+        )

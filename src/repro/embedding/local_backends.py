@@ -1,0 +1,258 @@
+"""Single-host embedding backends: merged dynamic hash tables and the
+TorchRec-style static baseline.
+
+`LocalDynamicBackend` is the paper's default training configuration — the
+`HashTableCollection` path (automatic merging §4.2 over dynamic tables §4.1):
+every feature of one merged table resolves through ONE fused insert/lookup on
+one table, with Eq. 8 global IDs keeping members disjoint.
+
+`LocalStaticBackend` is the baseline the paper replaces: one fixed-capacity
+table per logical feature group, raw IDs index rows directly, anything out of
+range falls back to a shared default row (the accuracy-degradation mechanism
+of §4.1). It implements the same protocol so baselines and paper-path runs
+differ by an `EngineConfig` string only.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashtable as ht
+from repro.core import static_table as stt
+from repro.core.dedup import unique_static
+from repro.core.sharded_embedding import LookupStats
+from repro.core.table_merging import (
+    FeatureConfig,
+    HashTableCollection,
+    logical_groups,
+)
+
+from repro.embedding.base import EngineConfig
+
+
+def _zero_stats() -> LookupStats:
+    z = jnp.int32(0)
+    return LookupStats(z, z, z, z)
+
+
+def _add_stats(a: LookupStats, b: LookupStats) -> LookupStats:
+    return LookupStats(*(x + y for x, y in zip(a, b)))
+
+
+class LocalDynamicBackend:
+    """Merged dynamic hash tables on this host (the HashTableCollection path)."""
+
+    dynamic = True
+    num_shards = 1
+
+    def __init__(self, features, cfg: EngineConfig, key: jax.Array):
+        self.features: Dict[str, FeatureConfig] = {f.name: f for f in features}
+        self.cfg = cfg
+        self.coll = HashTableCollection(
+            features, key, capacity=cfg.capacity, chunk_rows=cfg.chunk_rows
+        )
+
+    # -- topology ----------------------------------------------------------
+    def table_names(self) -> Tuple[str, ...]:
+        return tuple(self.coll.tables)
+
+    def table_of(self, feature: str) -> str:
+        return self.coll.table_name_of(feature)
+
+    def _bucket(self, feats: Dict[str, jax.Array]):
+        """Group encoded IDs per merged table => one fused op per table."""
+        return self.coll.index.bucket(feats)
+
+    # -- protocol ----------------------------------------------------------
+    def insert(self, feats: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        out: Dict[str, jax.Array] = {}
+        for table, items in self._bucket(feats).items():
+            tbl = self.coll.tables[table]
+            flat = jnp.concatenate([g.reshape(-1) for _, g in items])
+            rows = tbl.insert(flat)
+            ofs = 0
+            for name, gids in items:
+                out[name] = rows[ofs : ofs + gids.size].reshape(gids.shape)
+                ofs += gids.size
+        return out
+
+    def rows_for(self, feature: str, ids: jax.Array) -> jax.Array:
+        table, gids = self.coll.global_ids(feature, jnp.asarray(ids))
+        return self.coll.tables[table].find_rows(gids.reshape(-1)).reshape(gids.shape)
+
+    def raw_lookup(self, feats, step: int, with_stats: bool = True):
+        """Resolve-only fused lookup (insertion happens in `insert`, which
+        the engine's lookup runs first for dynamic backends — same contract
+        as the sharded backends, and one probe pass instead of two)."""
+        out: Dict[str, jax.Array] = {}
+        stats = _zero_stats()
+        for table, items in self._bucket(feats).items():
+            tbl = self.coll.tables[table]
+            flat = jnp.concatenate([g.reshape(-1) for _, g in items])
+            vecs = tbl.lookup(flat, step)
+            ofs = 0
+            for name, gids in items:
+                out[name] = vecs[ofs : ofs + gids.size].reshape(
+                    gids.shape + (vecs.shape[-1],)
+                )
+                ofs += gids.size
+            if with_stats:
+                stats = _add_stats(
+                    stats,
+                    LookupStats(
+                        ids_sent=jnp.int32(0),  # no exchange on a single host
+                        ids_before_dedup=jnp.sum(flat != -1).astype(jnp.int32),
+                        # device-side unique count: no host transfer involved
+                        lookups=unique_static(flat, flat.shape[0]).count,
+                        dropped=jnp.int32(0),
+                    ),
+                )
+        return out, stats
+
+    # -- storage -----------------------------------------------------------
+    def table_emb(self, table: str) -> jax.Array:
+        return self.coll.tables[table].state.emb
+
+    def set_table_emb(self, table: str, emb: jax.Array) -> None:
+        tbl = self.coll.tables[table]
+        tbl.state = tbl.state._replace(emb=emb)
+
+    def row_capacity(self, table: str) -> int:
+        return self.coll.tables[table].state.row_capacity
+
+    def table_size(self, table: str) -> int:
+        return len(self.coll.tables[table])
+
+    def evict(self, n: int, policy: str, step: int):
+        out = {}
+        for table, tbl in self.coll.tables.items():
+            count = tbl.evict(n, policy=policy, step=step)
+            out[table] = (count, tbl.last_remap)
+        return out
+
+    def shard_state_tree(self, shard: int):
+        assert shard == 0
+        return {name: tbl.state._asdict() for name, tbl in self.coll.tables.items()}
+
+    def load_shard_state_tree(self, shard: int, tree) -> None:
+        assert shard == 0
+        import dataclasses
+
+        for name, fields in tree.items():
+            tbl = self.coll.tables[name]
+            tbl.state = ht.HashTableState(**fields)
+            tbl.cfg = dataclasses.replace(tbl.cfg, capacity=tbl.state.capacity)
+
+    def opt_rows_of_shard(self, shard: int, arr: jax.Array) -> jax.Array:
+        return arr
+
+    def nbytes(self) -> int:
+        total = 0
+        for tbl in self.coll.tables.values():
+            for leaf in tbl.state:
+                total += leaf.nbytes
+        return total
+
+
+class LocalStaticBackend:
+    """Fixed-capacity tables with a default-row fallback (the baseline)."""
+
+    dynamic = False
+    num_shards = 1
+
+    def __init__(self, features, cfg: EngineConfig, key: jax.Array):
+        self.features = {f.name: f for f in features}
+        self.cfg = cfg
+        self._logical = {f.name: (f.shared_table or f.name) for f in features}
+        groups = logical_groups(features)
+        keys = jax.random.split(key, max(1, len(groups)))
+        self.tables: Dict[str, stt.StaticTableState] = {}
+        self.table_cfgs: Dict[str, stt.StaticTableConfig] = {}
+        for (name, rep), k in zip(groups.items(), keys):
+            tc = stt.StaticTableConfig(
+                capacity=cfg.static_capacity,
+                embed_dim=rep.embed_dim,
+                dtype=jnp.dtype(cfg.dtype),
+                init_scale=cfg.init_scale,
+            )
+            self.table_cfgs[name] = tc
+            self.tables[name] = stt.create(tc, k)
+
+    def table_names(self) -> Tuple[str, ...]:
+        return tuple(self.tables)
+
+    def table_of(self, feature: str) -> str:
+        return self._logical[feature]
+
+    def _rows(self, table: str, ids: jax.Array) -> jax.Array:
+        """Raw IDs index rows; valid overflow hits the default row; padding
+        stays -1 so gradients never touch the default row on its behalf."""
+        cap = self.table_cfgs[table].capacity
+        ids = jnp.asarray(ids)
+        in_range = (ids >= 0) & (ids < cap)
+        return jnp.where(
+            ids < 0, jnp.int32(-1), jnp.where(in_range, ids, cap).astype(jnp.int32)
+        )
+
+    def insert(self, feats):
+        return {f: self._rows(self.table_of(f), ids) for f, ids in feats.items()}
+
+    def rows_for(self, feature: str, ids: jax.Array) -> jax.Array:
+        return self._rows(self.table_of(feature), ids)
+
+    def raw_lookup(self, feats, step: int, with_stats: bool = True):
+        out: Dict[str, jax.Array] = {}
+        stats = _zero_stats()
+        for name, ids in feats.items():
+            table = self.table_of(name)
+            tc = self.table_cfgs[table]
+            ids = jnp.asarray(ids)
+            vecs = stt.lookup(self.tables[table], ids.reshape(-1), tc)
+            vecs = jnp.where((ids.reshape(-1) == -1)[:, None], 0.0, vecs)
+            out[name] = vecs.reshape(ids.shape + (tc.embed_dim,))
+            if with_stats:
+                valid = ids.reshape(-1) >= 0
+                over = valid & (ids.reshape(-1) >= tc.capacity)
+                n_valid = jnp.sum(valid).astype(jnp.int32)
+                stats = _add_stats(
+                    stats,
+                    LookupStats(
+                        ids_sent=jnp.int32(0),
+                        ids_before_dedup=n_valid,
+                        lookups=n_valid,
+                        dropped=jnp.sum(over).astype(jnp.int32),  # default-row
+                    ),
+                )
+        return out, stats
+
+    def table_emb(self, table: str) -> jax.Array:
+        return self.tables[table].emb
+
+    def set_table_emb(self, table: str, emb: jax.Array) -> None:
+        self.tables[table] = stt.StaticTableState(emb=emb)
+
+    def row_capacity(self, table: str) -> int:
+        return self.tables[table].emb.shape[0]
+
+    def table_size(self, table: str) -> int:
+        return self.table_cfgs[table].capacity  # fixed by construction
+
+    def evict(self, n: int, policy: str, step: int):
+        return {}  # nothing to evict: capacity is fixed by construction
+
+    def shard_state_tree(self, shard: int):
+        assert shard == 0
+        return {name: {"emb": state.emb} for name, state in self.tables.items()}
+
+    def load_shard_state_tree(self, shard: int, tree) -> None:
+        assert shard == 0
+        for name, fields in tree.items():
+            self.tables[name] = stt.StaticTableState(emb=fields["emb"])
+
+    def opt_rows_of_shard(self, shard: int, arr: jax.Array) -> jax.Array:
+        return arr
+
+    def nbytes(self) -> int:
+        return sum(state.emb.nbytes for state in self.tables.values())

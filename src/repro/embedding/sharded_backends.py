@@ -1,0 +1,364 @@
+"""Mesh-sharded embedding backends: model-parallel dynamic hash shards and
+the contiguous row-sharded vocab table.
+
+Both wrap the two-all-to-all lookup of `core/sharded_embedding.py` (§3 model
+parallelism + §4.3 two-stage dedup) behind the same `EmbeddingBackend`
+protocol as the single-host backends, so a trainer or benchmark switches to a
+mesh by changing an `EngineConfig` string.
+
+Row-handle scheme
+-----------------
+Sharded handles are `shard * row_stride + local_row` with a *fixed* stride
+(`EngineConfig.row_stride`), so handles minted before a chunk expansion stay
+valid after it — the same reason the paper's key structure keeps embedding
+rows immobile during growth (Fig. 6c). `table_emb()` materializes the
+stride-padded concatenation (a host-side convenience view for the O(batch)
+gather path); the device lookup path never builds it.
+
+Host control plane vs device data plane: inserts/eviction run on the host
+against per-shard `DynamicHashTable`s (as in the real system, where the
+dispatch stream owns ID admission); the fused dedup lookup runs under
+`shard_map` over the stacked shard states.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.common import compat
+from repro.core import hashtable as ht
+from repro.core import sharded_embedding as se
+from repro.core.sharded_embedding import LookupStats
+from repro.core.table_merging import FeatureConfig, MergeIndex, logical_groups
+
+from repro.embedding.base import EngineConfig
+from repro.embedding.local_backends import _add_stats, _zero_stats
+
+
+class ShardedDynamicBackend:
+    """Model-parallel dynamic hash shards behind the two-stage dedup lookup."""
+
+    dynamic = True
+
+    def __init__(self, features, cfg: EngineConfig, key: jax.Array):
+        self.index = MergeIndex(features)
+        self.features = self.index.features
+        self.cfg = cfg
+        self.num_shards = cfg.num_shards
+        self.specs = self.index.specs
+        self.shards: Dict[str, List[ht.DynamicHashTable]] = {}
+        spec_keys = jax.random.split(key, max(1, len(self.specs)))
+        for spec, sk in zip(self.specs, spec_keys):
+            tcfg = ht.HashTableConfig(
+                capacity=cfg.capacity,
+                embed_dim=spec.embed_dim,
+                chunk_rows=cfg.chunk_rows,
+                dtype=jnp.dtype(spec.dtype),
+                init_scale=cfg.init_scale,
+            )
+            # A 1-shard table reuses the spec key directly so it is
+            # bit-identical to the local-dynamic table (backend parity).
+            keys = [sk] if self.num_shards == 1 else list(
+                jax.random.split(sk, self.num_shards)
+            )
+            self.shards[spec.name] = [ht.DynamicHashTable(tcfg, k) for k in keys]
+        self._lookup_cache: Dict[tuple, object] = {}
+
+    # -- topology ----------------------------------------------------------
+    def table_names(self) -> Tuple[str, ...]:
+        return tuple(self.shards)
+
+    def table_of(self, feature: str) -> str:
+        return self.index.table_of(feature)
+
+    def global_ids(self, feature: str, ids: jax.Array) -> Tuple[str, jax.Array]:
+        return self.index.global_ids(feature, ids)
+
+    def _bucket(self, feats: Dict[str, jax.Array]):
+        return self.index.bucket(feats)
+
+    def _owners(self, flat: np.ndarray) -> np.ndarray:
+        own = np.asarray(
+            ht.murmur3_fmix64(jnp.asarray(flat)) % np.uint64(self.num_shards)
+        ).astype(np.int64)
+        return np.where(flat == -1, -1, own)
+
+    # -- protocol ----------------------------------------------------------
+    def _resolve(self, table: str, flat: jax.Array, insert: bool) -> np.ndarray:
+        """Route IDs to their owner shard (hash ownership, balanced) and
+        resolve shard-local rows into fixed-stride global handles."""
+        stride = self.cfg.row_stride
+        flat_np = np.asarray(flat)
+        own = self._owners(flat_np)
+        handles = np.full(flat_np.shape, -1, np.int32)
+        for s, tbl in enumerate(self.shards[table]):
+            m = own == s
+            if not m.any():
+                continue
+            ids_s = jnp.asarray(flat_np[m])
+            rows = np.asarray(tbl.insert(ids_s) if insert else tbl.find_rows(ids_s))
+            if rows.size and rows.max() >= stride:
+                raise ValueError(
+                    f"shard {s} of {table!r} outgrew row_stride={stride}; "
+                    "raise EngineConfig.row_stride"
+                )
+            handles[m] = np.where(rows < 0, -1, s * stride + rows)
+        return handles
+
+    def insert(self, feats: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        out: Dict[str, jax.Array] = {}
+        for table, items in self._bucket(feats).items():
+            flat = jnp.concatenate([g.reshape(-1) for _, g in items])
+            handles = self._resolve(table, flat, insert=True)
+            ofs = 0
+            for name, gids in items:
+                out[name] = jnp.asarray(
+                    handles[ofs : ofs + gids.size].reshape(gids.shape)
+                )
+                ofs += gids.size
+        return out
+
+    def rows_for(self, feature: str, ids: jax.Array) -> jax.Array:
+        table, gids = self.global_ids(feature, ids)
+        handles = self._resolve(table, gids.reshape(-1), insert=False)
+        return jnp.asarray(handles.reshape(gids.shape))
+
+    def _lookup_fn(self, table: str, n: int):
+        tables = self.shards[table]
+        tcfg = se.align_table_shards(tables)
+        dim = tables[0].cfg.embed_dim
+        lcfg = se.LookupConfig(
+            num_shards=self.num_shards,
+            embed_dim=dim,
+            local_unique_cap=self.cfg.local_unique_cap or n,
+            per_peer_cap=self.cfg.per_peer_cap or n,
+            dedup_stage1=self.cfg.dedup_stage1,
+            dedup_stage2=self.cfg.dedup_stage2,
+            axis=self.cfg.model_axis,
+            owner="hash",
+        )
+        key = (table, n, tcfg.capacity, tables[0].state.row_capacity,
+               lcfg.local_unique_cap, lcfg.per_peer_cap)
+        if key not in self._lookup_cache:
+            self._lookup_cache[key] = se.make_hash_lookup(
+                lcfg, tcfg, self.cfg.mesh, P(self.cfg.data_axis)
+            )
+        return self._lookup_cache[key]
+
+    def raw_lookup(self, feats, step: int, with_stats: bool = True):
+        # stats here are psum'd by the device lookup itself — no extra cost,
+        # so `with_stats` has nothing to skip
+        out: Dict[str, jax.Array] = {}
+        stats = _zero_stats()
+        for table, items in self._bucket(feats).items():
+            flat = jnp.concatenate([g.reshape(-1) for _, g in items])
+            fn = self._lookup_fn(table, flat.size)
+            stacked = se.stack_table_shards(self.shards[table])
+            with compat.set_mesh(self.cfg.mesh):
+                vecs, tstats = fn(stacked, flat)
+            ofs = 0
+            for name, gids in items:
+                out[name] = vecs[ofs : ofs + gids.size].reshape(
+                    gids.shape + (vecs.shape[-1],)
+                )
+                ofs += gids.size
+            stats = _add_stats(stats, jax.tree.map(jnp.int32, tstats))
+        return out, stats
+
+    # -- storage -----------------------------------------------------------
+    def table_emb(self, table: str) -> jax.Array:
+        """Stride-padded concatenation of shard embeddings: the dense view
+        that fixed-stride handles index (host gather path)."""
+        stride = self.cfg.row_stride
+        parts = []
+        for tbl in self.shards[table]:
+            emb = tbl.state.emb
+            if emb.shape[0] > stride:
+                raise ValueError(
+                    f"{table!r} shard rows {emb.shape[0]} exceed row_stride {stride}"
+                )
+            pad = jnp.zeros((stride - emb.shape[0], emb.shape[1]), emb.dtype)
+            parts.append(jnp.concatenate([emb, pad], axis=0))
+        return jnp.concatenate(parts, axis=0)
+
+    def set_table_emb(self, table: str, emb: jax.Array) -> None:
+        stride = self.cfg.row_stride
+        for s, tbl in enumerate(self.shards[table]):
+            rows = tbl.state.row_capacity
+            tbl.state = tbl.state._replace(
+                emb=emb[s * stride : s * stride + rows]
+            )
+
+    def row_capacity(self, table: str) -> int:
+        return self.num_shards * self.cfg.row_stride
+
+    def table_size(self, table: str) -> int:
+        return sum(len(t) for t in self.shards[table])
+
+    def evict(self, n: int, policy: str, step: int):
+        """Per-shard local eviction; per-shard compactions compose into one
+        handle-space remap (fixed stride keeps the algebra trivial)."""
+        stride = self.cfg.row_stride
+        out = {}
+        per_shard = [n // self.num_shards] * self.num_shards
+        for s in range(n % self.num_shards):
+            per_shard[s] += 1
+        for table, tables in self.shards.items():
+            total = 0
+            # Identity remap everywhere; only the spans of shards that
+            # actually evicted are overwritten — rows of untouched shards
+            # keep their optimizer moments.
+            survive = np.ones((self.num_shards * stride,), bool)
+            new_index = np.arange(self.num_shards * stride, dtype=np.int32)
+            for s, tbl in enumerate(tables):
+                if per_shard[s] <= 0:
+                    continue
+                total += tbl.evict(per_shard[s], policy=policy, step=step)
+                sv, ni = (np.asarray(x) for x in tbl.last_remap)
+                survive[s * stride : s * stride + sv.shape[0]] = sv
+                new_index[s * stride : s * stride + ni.shape[0]] = s * stride + ni
+            out[table] = (total, (jnp.asarray(survive), jnp.asarray(new_index)))
+        return out
+
+    def shard_state_tree(self, shard: int):
+        return {
+            name: tables[shard].state._asdict()
+            for name, tables in self.shards.items()
+        }
+
+    def load_shard_state_tree(self, shard: int, tree) -> None:
+        for name, fields in tree.items():
+            tbl = self.shards[name][shard]
+            tbl.state = ht.HashTableState(**fields)
+            tbl.cfg = dataclasses.replace(tbl.cfg, capacity=tbl.state.capacity)
+
+    def opt_rows_of_shard(self, shard: int, arr: jax.Array) -> jax.Array:
+        stride = self.cfg.row_stride
+        return arr[shard * stride : (shard + 1) * stride]
+
+    def nbytes(self) -> int:
+        total = 0
+        for tables in self.shards.values():
+            for tbl in tables:
+                for leaf in tbl.state:
+                    total += leaf.nbytes
+        return total
+
+
+class ShardedVocabBackend:
+    """Contiguous row-sharded vocab table (block ownership, §3 baseline)."""
+
+    dynamic = False
+
+    def __init__(self, features, cfg: EngineConfig, key: jax.Array):
+        self.features = {f.name: f for f in features}
+        self.cfg = cfg
+        self.num_shards = cfg.num_shards
+        assert cfg.vocab_size % cfg.num_shards == 0, "vocab must split evenly"
+        self._logical = {f.name: (f.shared_table or f.name) for f in features}
+        groups = logical_groups(features)
+        keys = jax.random.split(key, max(1, len(groups)))
+        self.tables: Dict[str, jax.Array] = {}
+        self._dims: Dict[str, int] = {}
+        for (name, rep), k in zip(groups.items(), keys):
+            self._dims[name] = rep.embed_dim
+            self.tables[name] = (
+                jax.random.normal(k, (cfg.vocab_size, rep.embed_dim), jnp.float32)
+                * cfg.init_scale
+            ).astype(jnp.dtype(cfg.dtype))
+        self._lookup_cache: Dict[tuple, object] = {}
+        self._load_parts: Dict[str, Dict[int, np.ndarray]] = {}
+
+    def table_names(self) -> Tuple[str, ...]:
+        return tuple(self.tables)
+
+    def table_of(self, feature: str) -> str:
+        return self._logical[feature]
+
+    def _rows(self, ids: jax.Array) -> jax.Array:
+        ids = jnp.asarray(ids)
+        valid = (ids >= 0) & (ids < self.cfg.vocab_size)
+        return jnp.where(valid, ids, -1).astype(jnp.int32)
+
+    def insert(self, feats):
+        return {f: self._rows(ids) for f, ids in feats.items()}
+
+    def rows_for(self, feature: str, ids: jax.Array) -> jax.Array:
+        return self._rows(ids)
+
+    def _lookup_fn(self, table: str, n: int):
+        lcfg = se.LookupConfig(
+            num_shards=self.num_shards,
+            embed_dim=self._dims[table],
+            local_unique_cap=self.cfg.local_unique_cap or n,
+            per_peer_cap=self.cfg.per_peer_cap or n,
+            dedup_stage1=self.cfg.dedup_stage1,
+            dedup_stage2=self.cfg.dedup_stage2,
+            axis=self.cfg.model_axis,
+            owner="block",
+            vocab_size=self.cfg.vocab_size,
+        )
+        key = (table, n, lcfg.local_unique_cap, lcfg.per_peer_cap)
+        if key not in self._lookup_cache:
+            self._lookup_cache[key] = se.make_vocab_lookup(
+                lcfg, self.cfg.mesh, P(self.cfg.data_axis)
+            )
+        return self._lookup_cache[key]
+
+    def raw_lookup(self, feats, step: int, with_stats: bool = True):
+        out: Dict[str, jax.Array] = {}
+        stats = _zero_stats()
+        for name, ids in feats.items():
+            table = self.table_of(name)
+            ids = jnp.asarray(ids)
+            flat = self._rows(ids).astype(jnp.int64).reshape(-1)
+            fn = self._lookup_fn(table, flat.size)
+            with compat.set_mesh(self.cfg.mesh):
+                vecs, tstats = fn(self.tables[table], flat)
+            out[name] = vecs.reshape(ids.shape + (self._dims[table],))
+            stats = _add_stats(stats, jax.tree.map(jnp.int32, tstats))
+        return out, stats
+
+    def table_emb(self, table: str) -> jax.Array:
+        return self.tables[table]
+
+    def set_table_emb(self, table: str, emb: jax.Array) -> None:
+        self.tables[table] = emb
+
+    def row_capacity(self, table: str) -> int:
+        return self.cfg.vocab_size
+
+    def table_size(self, table: str) -> int:
+        return self.cfg.vocab_size  # fixed by construction
+
+    def evict(self, n: int, policy: str, step: int):
+        return {}  # contiguous vocab rows are never evicted
+
+    def shard_state_tree(self, shard: int):
+        rps = self.cfg.vocab_size // self.num_shards
+        return {
+            name: {"emb": emb[shard * rps : (shard + 1) * rps]}
+            for name, emb in self.tables.items()
+        }
+
+    def load_shard_state_tree(self, shard: int, tree) -> None:
+        for name, fields in tree.items():
+            parts = self._load_parts.setdefault(name, {})
+            parts[shard] = np.asarray(fields["emb"])
+            if len(parts) == self.num_shards:
+                self.tables[name] = jnp.concatenate(
+                    [jnp.asarray(parts[s]) for s in range(self.num_shards)], axis=0
+                )
+                del self._load_parts[name]
+
+    def opt_rows_of_shard(self, shard: int, arr: jax.Array) -> jax.Array:
+        rps = self.cfg.vocab_size // self.num_shards
+        return arr[shard * rps : (shard + 1) * rps]
+
+    def nbytes(self) -> int:
+        return sum(emb.nbytes for emb in self.tables.values())

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.common import compat
 from repro.common.dist import DistContext
 from repro.common.params import shape_dtype_tree
 from repro.common.sharding import (
@@ -145,7 +146,7 @@ def run_case(
     bshard = _named_batch_shardings(batch_structs, mesh, mrules)
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.kind == "train":
             opt = Adam(lr=1e-4)
             ostructs = T.opt_state_structs(cfg)

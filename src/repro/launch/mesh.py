@@ -16,22 +16,19 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import Mesh
 
+from repro.common import compat
 from repro.common.sharding import DEFAULT_RULES, LogicalRules
-
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 2, model: int = 4) -> Mesh:
     """Small mesh over forced host devices (integration tests)."""
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def rules_for_mesh(mesh: Mesh, rules: LogicalRules = DEFAULT_RULES) -> LogicalRules:

@@ -250,13 +250,14 @@ def sharded_decode_attention(
 
     from jax.sharding import PartitionSpec as P
 
-    return jax.shard_map(
+    from repro.common import compat
+
+    return compat.shard_map(
         body,
         mesh=dist.mesh,
         in_specs=(P(), P(None, ax), P(None, ax)),
         out_specs=P(),
         axis_names={ax},
-        check_vma=False,
     )(q, kc, vc)
 
 

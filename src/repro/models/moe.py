@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.common import compat
 from repro.common.dist import DistContext
 from repro.common.params import ParamDef
 from repro.configs.base import ModelConfig
@@ -145,13 +146,12 @@ def moe_apply(
             y = back[flat_e_l * cap + pos] * ok[:, None].astype(back.dtype)
             return y
 
-        y_slots = jax.shard_map(
+        y_slots = compat.shard_map(
             body,
             mesh=dist.mesh,
             in_specs=(P(ax), P(ax), P(ax), P(ax), P(ax)),
             out_specs=P(ax),
             axis_names={ax},
-            check_vma=False,
         )(vecs, flat_e, p["wi"], p["wg"], p["wo"])
     else:
         cap = max(8, int(math.ceil((n + pad) * k * cfg.capacity_factor / E)))

@@ -36,6 +36,32 @@ class RowwiseAdam:
         z = jnp.zeros((num_rows,), jnp.float32)
         return RowwiseAdamState(jnp.int32(0), z, jnp.copy(z))
 
+    def migrate(self, state: RowwiseAdamState, num_rows: int) -> RowwiseAdamState:
+        """Carry moments across chunked table growth (§4.1 + §5.2): new rows
+        get zero moments, existing rows keep theirs — never reset on growth."""
+        old = state.mu.shape[0]
+        if num_rows == old:
+            return state
+        if num_rows < old:
+            raise ValueError(f"rowwise state cannot shrink ({old} -> {num_rows})")
+        pad = jnp.zeros((num_rows - old,), jnp.float32)
+        return RowwiseAdamState(
+            state.step,
+            jnp.concatenate([state.mu, pad]),
+            jnp.concatenate([state.nu, pad]),
+        )
+
+    def remap(self, state: RowwiseAdamState, new_index: jax.Array,
+              survive: jax.Array, num_rows: int) -> RowwiseAdamState:
+        """Follow an eviction compaction: surviving row r moves to
+        new_index[r]; its moments move with it, evicted rows' moments drop."""
+        dest = jnp.where(survive, new_index, num_rows)
+        mu = jnp.zeros((num_rows,), jnp.float32).at[dest].set(
+            state.mu[: survive.shape[0]], mode="drop")
+        nu = jnp.zeros((num_rows,), jnp.float32).at[dest].set(
+            state.nu[: survive.shape[0]], mode="drop")
+        return RowwiseAdamState(state.step, mu, nu)
+
     def update(
         self,
         emb: jax.Array,  # (rows, d) table (any float dtype)

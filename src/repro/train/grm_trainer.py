@@ -3,52 +3,51 @@
 Composes every subsystem:
 
   data pipeline (balanced batches, §5.1)
-    -> dynamic hash tables w/ automatic merging (§4.1–4.2; host control plane
-       inserts new IDs — the real-time insert path)
+    -> EmbeddingEngine (§4): dynamic hash tables w/ automatic merging, the
+       host control plane inserting new IDs in real time — for EVERY
+       configured feature (contextual `user` sequence + `item` actions)
     -> jitted device step: gather rows -> HSTU stack -> MMoE -> CTR/CTCVR loss
        -> grads for the dense model AND for the *touched embedding rows only*
-    -> sparse grad accumulation (sorted segment-sum, §5.2)
-    -> rowwise Adam on touched rows + dense Adam (§5.2)
+    -> engine.apply_grads: sparse grad accumulation (sorted segment-sum,
+       §5.2) + rowwise Adam on touched rows, moments migrated across growth
+    -> dense Adam
+
+The trainer is dense-model + loop logic only: all sparse storage, update and
+eviction policy lives behind the `EmbeddingEngine` facade, so switching the
+backend (local/sharded, dynamic/static) is an `EngineConfig` change, not a
+trainer change.
 
 The jitted step takes the gathered row indices as data, so the embedding
-gradient is computed w.r.t. the (B, S, d) gathered vectors — O(batch), never
+gradient is computed w.r.t. the gathered vectors — O(batch), never
 O(table) — exactly the paper's "selectively updating only activated parts".
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import grad_accum as ga
-from repro.core import hashtable as ht
-from repro.core.table_merging import FeatureConfig, HashTableCollection
+from repro.embedding import EmbeddingEngine, FeatureConfig
 from repro.models.grm import grm_apply, grm_loss, grm_param_defs
-from repro.optim.adam import Adam, AdamState, global_norm
-from repro.optim.rowwise_adam import RowwiseAdam, RowwiseAdamState
+from repro.optim.adam import Adam, global_norm
 from repro.common.params import init_params
 
 
 @dataclasses.dataclass
 class GRMTrainer:
     cfg: ModelConfig
-    features: HashTableCollection  # merged dynamic tables (item/user features)
+    engine: EmbeddingEngine  # unified sparse facade (all feature access)
     dense_opt: Adam
-    sparse_opt: RowwiseAdam
-    accum_batches: int = 1  # sparse gradient accumulation window (§5.2)
 
     def __post_init__(self):
         key = jax.random.PRNGKey(0)
         self.dense_params = init_params(key, grm_param_defs(self.cfg))
         self.dense_opt_state = self.dense_opt.init(self.dense_params)
-        self._sparse_opt_states: Dict[str, RowwiseAdamState] = {}
-        self._accums: Dict[str, ga.SparseGradAccum] = {}
-        self._accum_count = 0
         self._step_fn = jax.jit(functools.partial(_grm_step, cfg=self.cfg))
 
     # ------------------------------------------------------------------
@@ -56,44 +55,26 @@ class GRMTrainer:
     # ------------------------------------------------------------------
 
     def _sparse_phase(self, batch: Dict[str, np.ndarray]):
-        """Dispatch-stream work: encode IDs, insert unseen ones (dynamic
-        table, real-time), resolve rows. Row indices are stable under
-        subsequent inserts, so this may safely run ahead of the compute of
-        the previous batch (§3 'Pipeline')."""
-        item_ids = jnp.asarray(batch["item_ids"])  # (B, S) int64, -1 pad
-        table_name, gids = self.features.global_ids("item", item_ids)
-        tbl = self.features.tables[table_name]
-        tbl.insert(gids.reshape(-1))
-        rows = tbl.find_rows(gids.reshape(-1)).reshape(gids.shape)  # (B, S)
-        return table_name, rows
+        """Dispatch-stream work: insert unseen IDs of every configured
+        feature (dynamic table, real-time), resolve row handles. Handles are
+        stable under subsequent inserts, so this may safely run ahead of the
+        compute of the previous batch (§3 'Pipeline')."""
+        feats = self.engine.batch_features(batch)
+        return self.engine.insert(feats)
 
-    def _dispatch_dense(self, batch, sparse):
+    def _dispatch_dense(self, batch, rows):
         """Compute-stream work: enqueue the jitted fwd+bwd (non-blocking —
         jax dispatch is async; the host returns immediately)."""
-        table_name, rows = sparse
-        tbl = self.features.tables[table_name]
+        embs = {f: self.engine.emb_of(f) for f in rows}
         return self._step_fn(
-            self.dense_params, tbl.state.emb, rows,
+            self.dense_params, embs, rows,
             jnp.asarray(batch["labels"]), jnp.asarray(batch["mask"]),
         )
 
-    def _finish(self, sparse, outputs) -> Dict[str, float]:
-        """Update-stream work: sparse grad accumulation + both optimizers."""
-        table_name, rows = sparse
+    def _finish(self, rows, outputs) -> Dict[str, float]:
+        """Update-stream work: engine-side sparse path + dense optimizer."""
         loss, metrics, dense_grads, emb_grads = outputs
-
-        slots = rows.size
-        acc = self._accums.get(table_name)
-        if acc is None or acc.rows.shape[0] < slots * self.accum_batches:
-            acc = ga.init_accumulator(slots * self.accum_batches, emb_grads.shape[-1])
-        acc = ga.accumulate(acc, rows.reshape(-1),
-                            emb_grads.reshape(-1, emb_grads.shape[-1]))
-        self._accums[table_name] = acc
-        self._accum_count += 1
-        if self._accum_count >= self.accum_batches:
-            self._apply_sparse(table_name)
-            self._accum_count = 0
-
+        self.engine.apply_grads(rows, emb_grads)
         self.dense_params, self.dense_opt_state = self.dense_opt.update(
             dense_grads, self.dense_opt_state, self.dense_params
         )
@@ -101,8 +82,8 @@ class GRMTrainer:
 
     def train_step(self, batch: Dict[str, np.ndarray]) -> Dict[str, float]:
         """One host-driven step over a padded balanced batch (unpipelined)."""
-        sparse = self._sparse_phase(batch)
-        return self._finish(sparse, self._dispatch_dense(batch, sparse))
+        rows = self._sparse_phase(batch)
+        return self._finish(rows, self._dispatch_dense(batch, rows))
 
     def train_stream(self, batches) -> "Iterator[Dict[str, float]]":
         """Pipelined training (§3): while the device runs the dense fwd+bwd
@@ -114,41 +95,46 @@ class GRMTrainer:
             cur = next(it)
         except StopIteration:
             return
-        cur_sparse = self._sparse_phase(cur)
+        cur_rows = self._sparse_phase(cur)
         for nxt in it:
-            outputs = self._dispatch_dense(cur, cur_sparse)  # async on device
-            nxt_sparse = self._sparse_phase(nxt)  # overlapped host work
-            yield self._finish(cur_sparse, outputs)
-            cur, cur_sparse = nxt, nxt_sparse
-        yield self._finish(cur_sparse, self._dispatch_dense(cur, cur_sparse))
-
-    # ------------------------------------------------------------------
-    def _apply_sparse(self, table_name: str) -> None:
-        tbl = self.features.tables[table_name]
-        acc = self._accums[table_name]
-        uniq, summed, reset = ga.drain(acc, acc.rows.shape[0])
-        self._accums[table_name] = reset
-        st = self._sparse_opt_states.get(table_name)
-        if st is None or st.mu.shape[0] != tbl.state.row_capacity:
-            st = self.sparse_opt.init(tbl.state.row_capacity)
-            # (capacity may have grown; counters reset is acceptable host-side)
-        new_emb, st = self.sparse_opt.update(tbl.state.emb, st, uniq, summed)
-        self._sparse_opt_states[table_name] = st
-        tbl.state = tbl.state._replace(emb=new_emb)
+            outputs = self._dispatch_dense(cur, cur_rows)  # async on device
+            nxt_rows = self._sparse_phase(nxt)  # overlapped host work
+            yield self._finish(cur_rows, outputs)
+            cur, cur_rows = nxt, nxt_rows
+        yield self._finish(cur_rows, self._dispatch_dense(cur, cur_rows))
 
 
-def _grm_step(dense_params, emb_table, rows, labels, mask, *, cfg: ModelConfig):
-    """Jitted: gather -> dense forward -> loss -> (dense grads, per-slot emb grads)."""
+def _grm_step(dense_params, embs, rows, labels, mask, *, cfg: ModelConfig):
+    """Jitted: gather every feature -> dense forward -> loss -> (dense grads,
+    per-slot embedding grads for every feature).
 
-    def loss_fn(dp, gathered):
-        logits = grm_apply(dp, gathered, mask, cfg)
+    Input composition (paper §2, Fig. 3): `item` is the positional action
+    sequence; every other feature (the contextual `user` sub-sequence) is
+    mean-pooled over its valid slots and broadcast-added to all positions.
+    """
+
+    gathered = {}
+    for f, emb_table in embs.items():
+        r = rows[f]
+        valid = r >= 0
+        gathered[f] = jnp.where(
+            valid[..., None], emb_table[jnp.where(valid, r, 0)], 0.0
+        ).astype(jnp.float32)
+
+    def loss_fn(dp, g):
+        x = g["item"]
+        for f, gv in g.items():
+            if f == "item":
+                continue
+            fvalid = (rows[f] >= 0).astype(jnp.float32)[..., None]
+            ctx = jnp.sum(gv * fvalid, axis=-2) / jnp.maximum(
+                jnp.sum(fvalid, axis=-2), 1.0
+            )
+            x = x + ctx[:, None, :]
+        logits = grm_apply(dp, x, mask, cfg)
         loss_sum, m = grm_loss(logits, labels, mask)
         return loss_sum / jnp.maximum(m["weight"], 1.0), m
 
-    valid = rows >= 0
-    gathered = jnp.where(
-        valid[..., None], emb_table[jnp.where(valid, rows, 0)], 0.0
-    ).astype(jnp.float32)
     (loss, m), (dgrads, egrads) = jax.value_and_grad(
         loss_fn, argnums=(0, 1), has_aux=True
     )(dense_params, gathered)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.common import compat
 from repro.common.params import init_params
 from repro.configs.registry import ARCHS
 from repro.core import hashtable as ht
@@ -26,8 +27,7 @@ from repro.models.grm import grm_apply, grm_loss, grm_param_defs
 
 def main():
     assert len(jax.devices()) == 8
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
 
     cfg = ARCHS["grm-4g"].reduced()
     D = cfg.d_model
@@ -74,7 +74,7 @@ def main():
 
     grad_fn = jax.jit(jax.value_and_grad(loss_fn, argnums=(0, 1),
                                          allow_int=True))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         loss, (dgrads, tgrads) = grad_fn(params, stacked)
         loss = float(loss)
 

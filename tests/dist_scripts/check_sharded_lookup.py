@@ -13,13 +13,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.common import compat
 from repro.core import hashtable as ht
 from repro.core import sharded_embedding as se
 
 
 def main():
     assert len(jax.devices()) == 8
-    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
 
     # ---------------- vocab lookup + autodiff ----------------
     V, D = 64, 16
@@ -31,7 +32,7 @@ def main():
     ids = jnp.array(np.random.default_rng(0).integers(0, V, (8, 12)), jnp.int64)
     ids = ids.at[0, :3].set(-1)
     lookup = se.make_vocab_lookup(cfg, mesh, P("data", None))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         vecs, stats = lookup(table, ids)
     expect = jnp.where((ids == -1)[..., None], 0.0, table[jnp.clip(ids, 0, V - 1)])
     np.testing.assert_allclose(np.asarray(vecs), np.asarray(expect))
@@ -43,7 +44,7 @@ def main():
         v, _ = lookup(t, ids)
         return jnp.sum(v * w)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         g = jax.grad(f)(table)
     eg = np.zeros((V, D), np.float32)
     for i in range(8):
@@ -83,7 +84,7 @@ def main():
             owner="hash", dedup_stage1=d1, dedup_stage2=d2,
         )
         hl = se.make_hash_lookup(hcfg, tcfg, mesh, P("data", None))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             hv, hs = hl(stacked, q)
         np.testing.assert_allclose(np.asarray(hv).reshape(96, D), oracle, rtol=1e-6)
         results[name] = hs
@@ -101,7 +102,7 @@ def main():
         num_shards=4, embed_dim=D, local_unique_cap=64, per_peer_cap=64, owner="hash"
     )
     hl = se.make_hash_lookup(hcfg, tcfg, mesh, P("data", None))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         _, s2 = hl(stacked, q2)
     assert int(s2.ids_sent) <= 8 and int(s2.lookups) <= 4
     print("ALL DISTRIBUTED LOOKUP CHECKS OK")

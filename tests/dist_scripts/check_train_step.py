@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.common import compat
 from repro.common.dist import DistContext
 from repro.common.sharding import DEFAULT_RULES, fit_spec_to_shape
 from repro.configs.registry import get_config
@@ -64,7 +65,7 @@ def main():
     )
     dist = DistContext(mesh=mesh, batch_axes=("data",))
     step = jax.jit(T.make_train_step(cfg, opt, dist=dist))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         p_s, o_s, m_s = step(params_s, ostate_s, batch_s)
 
     assert abs(float(m_s["loss"]) - float(m_ref["loss"])) < 1e-3, (
@@ -89,7 +90,7 @@ def main():
     # a few more steps: loss must go down under the sharded step
     losses = [float(m_s["loss"])]
     for _ in range(5):
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             p_s, o_s, m_s = step(p_s, o_s, batch_s)
         losses.append(float(m_s["loss"]))
     assert losses[-1] < losses[0], losses

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.common import compat
 from repro.train.weighted_sync import (
     exchange_weights,
     unweighted_grad_sync,
@@ -28,8 +29,7 @@ from repro.train.weighted_sync import (
 
 def main():
     assert len(jax.devices()) == 8
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("data",))
 
     rng = np.random.default_rng(0)
     D = 16
@@ -71,14 +71,13 @@ def main():
         )
         return g, g_biased, all_w, total
 
-    shard = jax.shard_map(
+    shard = compat.shard_map(
         device_fn,
         mesh=mesh,
         in_specs=(P(), P("data"), P("data"), P("data")),
         out_specs=(P(), P(), P(), P()),
-        check_vma=False,
     )
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         g_weighted, g_biased, all_w, total = shard(w_param, x, y, mask)
 
     np.testing.assert_allclose(np.asarray(all_w), sizes.astype(np.float32))
@@ -101,7 +100,7 @@ def main():
         return jax.grad(lambda w: local_loss_sum(w, xs, ys, ms)[0]
                         / local_loss_sum(w, xs, ys, ms)[1])(w)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         g_pjit = pjit_grad(w_param)
     np.testing.assert_allclose(
         np.asarray(g_pjit), np.asarray(g_oracle), rtol=1e-5, atol=1e-6

@@ -1,0 +1,243 @@
+"""EmbeddingEngine facade tests (the unified sparse API):
+
+  * backend parity: the same ID stream through `local-dynamic` and a 1-shard
+    `sharded-dynamic` mesh produces bit-identical embeddings and stats,
+  * fused multi-feature lookup: item + user in one batch resolve through ONE
+    merged table (one fused lookup op, §4.2),
+  * rowwise-Adam moment migration: moments survive chunked table growth
+    (regression for the old reset-on-growth) and follow eviction compaction,
+  * engine save/load round-trip (elastic checkpoint glue, §5.2).
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common import compat
+from repro.embedding import EmbeddingEngine, EngineConfig, FeatureConfig
+from repro.optim.rowwise_adam import RowwiseAdam
+
+
+def _feats(dim=16):
+    return (FeatureConfig("item", dim), FeatureConfig("user", dim))
+
+
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    b = {
+        "item": rng.integers(0, 10**9, (2, 8)).astype(np.int64),
+        "user": rng.integers(0, 50, (2, 3)).astype(np.int64),
+    }
+    b["item"][0, -1] = -1  # padding must survive every backend
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
+def _local_engine(accum=1, chunk_rows=128, **kw):
+    return EmbeddingEngine(
+        _feats(),
+        EngineConfig(backend="local-dynamic", capacity=1 << 10,
+                     chunk_rows=chunk_rows, accum_batches=accum, **kw),
+        jax.random.PRNGKey(3),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Backend parity (acceptance: same stream -> identical embeddings and stats)
+# ---------------------------------------------------------------------------
+
+
+def test_backend_parity_local_vs_sharded_1dev():
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    local = _local_engine()
+    sharded = EmbeddingEngine(
+        _feats(),
+        EngineConfig(backend="sharded-dynamic", mesh=mesh, num_shards=1,
+                     capacity=1 << 10, chunk_rows=128, row_stride=1 << 12),
+        jax.random.PRNGKey(3),
+    )
+    for seed in (0, 1, 2):  # several batches: fresh IDs keep inserting
+        batch = _batch(seed)
+        lv, ls = local.lookup(batch)
+        sv, ss = sharded.lookup(batch)
+        for f in ("item", "user"):
+            np.testing.assert_array_equal(np.asarray(lv[f]), np.asarray(sv[f]))
+        # identical dedup accounting (a 1-shard exchange sends each unique
+        # ID exactly once = the local unique count)
+        assert int(ls.ids_before_dedup) == int(ss.ids_before_dedup)
+        assert int(ls.lookups) == int(ss.lookups)
+        assert int(ss.ids_sent) == int(ls.lookups)
+        assert int(ss.dropped) == 0
+    assert local.table_sizes() == sharded.table_sizes()
+
+
+def test_sharded_vocab_matches_direct_rows():
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    eng = EmbeddingEngine(
+        _feats(),
+        EngineConfig(backend="sharded-vocab", mesh=mesh, num_shards=1,
+                     vocab_size=64),
+        jax.random.PRNGKey(5),
+    )
+    ids = jnp.asarray([[0, 5, 63, -1]], jnp.int64)
+    vecs, _ = eng.lookup({"user": ids})
+    table = eng.emb_of("user")
+    np.testing.assert_array_equal(np.asarray(vecs["user"][0, 0]), np.asarray(table[0]))
+    np.testing.assert_array_equal(np.asarray(vecs["user"][0, 2]), np.asarray(table[63]))
+    np.testing.assert_array_equal(np.asarray(vecs["user"][0, 3]), 0.0)  # pad
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-feature lookup (§4.2: one lookup per merged table)
+# ---------------------------------------------------------------------------
+
+
+def test_multi_feature_single_merged_table():
+    eng = _local_engine()
+    batch = _batch(0)
+    # same dim + dtype => item and user share ONE merged table
+    assert len(eng.merged_tables) == 1
+    assert eng.table_of("item") == eng.table_of("user")
+
+    vecs, stats = eng.lookup(batch)
+    rows = {f: eng.rows_for(f, batch[f]) for f in batch}
+    emb = eng.emb_of("item")
+    for f in batch:
+        r = np.asarray(rows[f])
+        got = np.asarray(vecs[f])
+        valid = r >= 0
+        np.testing.assert_array_equal(
+            got[valid], np.asarray(emb)[r[valid]]
+        )  # fused path == direct row gather
+        assert (got[~valid] == 0).all()
+    # the fused probe count is the unique count across BOTH features
+    uniq = len({(f_r) for f in batch for f_r in np.asarray(rows[f]).ravel() if f_r >= 0})
+    assert int(stats.lookups) == uniq
+
+
+def test_static_backend_overflow_hits_default_row():
+    eng = EmbeddingEngine(
+        _feats(),
+        EngineConfig(backend="local-static", static_capacity=8),
+        jax.random.PRNGKey(1),
+    )
+    ids = jnp.asarray([[1, 7, 8, 100, -1]], jnp.int64)
+    vecs, stats = eng.lookup({"item": ids})
+    v = np.asarray(vecs["item"][0])
+    assert int(stats.dropped) == 2  # ids 8 and 100 overflow capacity 8
+    np.testing.assert_array_equal(v[2], v[3])  # both hit the default row
+    assert (v[4] == 0).all()  # padding stays zero
+    assert not (v[0] == v[1]).all()
+
+
+# ---------------------------------------------------------------------------
+# Moment migration (§5.2 fix: moments survive growth, follow eviction)
+# ---------------------------------------------------------------------------
+
+
+def test_moments_survive_grow_chunk():
+    eng = _local_engine(chunk_rows=64)
+    (table,) = eng.merged_tables
+    dim = 16
+    batch0 = {"item": jnp.asarray([[1, 2, 3, 4]], jnp.int64)}
+    rows0 = eng.insert(batch0)
+    eng.apply_grads(rows0, {"item": jnp.ones((1, 4, dim), jnp.float32)})
+    st0 = eng.opt_state(table)
+    r0 = np.asarray(rows0["item"]).ravel()
+    mu_before = np.asarray(st0.mu)[r0]
+    assert (mu_before != 0).all()
+    cap_before = eng.backend.row_capacity(table)
+
+    # flood enough fresh IDs to force at least one chunk expansion
+    rng = np.random.default_rng(9)
+    flood = {"item": jnp.asarray(rng.integers(10, 10**9, (4, 64)), jnp.int64)}
+    rowsf = eng.insert(flood)
+    assert eng.backend.row_capacity(table) > cap_before  # table actually grew
+    eng.apply_grads(rowsf, {"item": jnp.ones((4, 64, dim), jnp.float32)})
+
+    st1 = eng.opt_state(table)
+    assert st1.mu.shape[0] == eng.backend.row_capacity(table)
+    # regression: the old trainer re-init()ed here, zeroing these moments;
+    # rows untouched by the second update must keep theirs bit-exactly
+    np.testing.assert_array_equal(np.asarray(st1.mu)[r0], mu_before)
+    assert int(st1.step) == 2  # step also survives
+
+
+def test_moments_follow_eviction_compaction():
+    eng = _local_engine()
+    (table,) = eng.merged_tables
+    ids = jnp.asarray(np.arange(1, 33), jnp.int64)[None, :]
+    rows = eng.insert({"item": ids})
+    eng.apply_grads(rows, {"item": jnp.ones((1, 32, 16), jnp.float32)})
+    # heat up the first 8 ids so LFU evicts from the cold tail
+    for step in range(3):
+        eng.lookup({"item": ids[:, :8]}, step=step + 5)
+    hot_rows = np.asarray(eng.rows_for("item", ids[:, :8])).ravel()
+    mu_hot = np.asarray(eng.opt_state(table).mu)[hot_rows]
+    assert eng.evict(8) == 8
+    new_rows = np.asarray(eng.rows_for("item", ids[:, :8])).ravel()
+    assert (new_rows >= 0).all()  # hot ids survive
+    np.testing.assert_allclose(
+        np.asarray(eng.opt_state(table).mu)[new_rows], mu_hot, rtol=1e-6
+    )  # moments moved with their compacted rows
+
+
+def test_sharded_evict_preserves_nonevicting_shard_moments():
+    """evict(n) with n < num_shards leaves some shards untouched; their rows'
+    rowwise-Adam moments must survive identity-mapped (regression: an
+    all-False survive mask used to zero every non-evicting shard)."""
+    mesh = compat.make_mesh((1, 1), ("data", "model"))  # host-side paths only
+    eng = EmbeddingEngine(
+        _feats(),
+        EngineConfig(backend="sharded-dynamic", mesh=mesh, num_shards=4,
+                     capacity=1 << 10, chunk_rows=64, row_stride=1 << 10),
+        jax.random.PRNGKey(2),
+    )
+    (table,) = eng.merged_tables
+    ids = jnp.asarray(np.arange(1, 65), jnp.int64)[None, :]
+    rows = eng.insert({"item": ids})
+    eng.apply_grads(rows, {"item": jnp.ones((1, 64, 16), jnp.float32)})
+    nonzero_before = int(np.count_nonzero(np.asarray(eng.opt_state(table).mu)))
+    assert nonzero_before == 64
+    evicted = eng.evict(2)  # only shards 0 and 1 evict; 2 and 3 are skipped
+    assert evicted == 2
+    nonzero_after = int(np.count_nonzero(np.asarray(eng.opt_state(table).mu)))
+    assert nonzero_after == nonzero_before - evicted
+
+
+# ---------------------------------------------------------------------------
+# Save / load round-trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["local-dynamic", "local-static"])
+def test_engine_save_load_roundtrip(backend):
+    def build(key):
+        return EmbeddingEngine(
+            _feats(),
+            EngineConfig(backend=backend, capacity=1 << 10, chunk_rows=128,
+                         static_capacity=1 << 8),
+            jax.random.PRNGKey(key),
+            sparse_opt=RowwiseAdam(lr=5e-2),
+        )
+
+    eng = build(0)
+    batch = {k: jnp.abs(v) for k, v in _batch(0).items()}  # in-range ids
+    rows = eng.insert(batch)
+    eng.apply_grads(rows, {f: jnp.ones(r.shape + (16,), jnp.float32)
+                           for f, r in rows.items()})
+    ref, _ = eng.lookup(batch)
+
+    with tempfile.TemporaryDirectory() as d:
+        eng.save(d, 7)
+        other = build(1)  # different init: loading must overwrite it
+        other.load(d, 7)
+        got, _ = other.lookup(batch)
+        for f in batch:
+            np.testing.assert_array_equal(np.asarray(ref[f]), np.asarray(got[f]))
+        for t in eng.merged_tables:
+            a, b = eng.opt_state(t), other.opt_state(t)
+            assert int(a.step) == int(b.step)
+            np.testing.assert_array_equal(np.asarray(a.mu), np.asarray(b.mu))
+            np.testing.assert_array_equal(np.asarray(a.nu), np.asarray(b.nu))

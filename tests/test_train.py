@@ -10,13 +10,13 @@ import numpy as np
 import pytest
 
 from repro.configs.registry import ARCHS, get_config
-from repro.core.table_merging import FeatureConfig, HashTableCollection
 from repro.data import synth
 from repro.data.pipeline import make_input_pipeline
+from repro.embedding import EmbeddingEngine, EngineConfig
 from repro.optim.adam import Adam
 from repro.optim.rowwise_adam import RowwiseAdam
 from repro.train import trainer as T
-from repro.train.grm_trainer import GRMTrainer
+from repro.train.grm_trainer import GRMTrainer, default_grm_features
 from repro.train.loss import multi_task_bce, next_token_ce
 
 
@@ -75,17 +75,14 @@ def test_grm_trainer_end_to_end():
     pipeline -> dynamic tables -> HSTU+MMoE -> sparse & dense updates.
     Loss must decrease; new IDs must keep being inserted (dynamic table)."""
     cfg = ARCHS["grm-4g"].reduced()
-    feats = (
-        FeatureConfig("item", cfg.d_model),
-        FeatureConfig("user", cfg.d_model),
+    engine = EmbeddingEngine(
+        default_grm_features(cfg.d_model),
+        EngineConfig(backend="local-dynamic", capacity=1 << 12,
+                     chunk_rows=512, accum_batches=2),
+        jax.random.PRNGKey(0),
+        sparse_opt=RowwiseAdam(lr=5e-2),
     )
-    coll = HashTableCollection(feats, jax.random.PRNGKey(0), capacity=1 << 12,
-                               chunk_rows=512)
-    tr = GRMTrainer(
-        cfg=cfg, features=coll,
-        dense_opt=Adam(lr=3e-3), sparse_opt=RowwiseAdam(lr=5e-2),
-        accum_batches=2,
-    )
+    tr = GRMTrainer(cfg=cfg, engine=engine, dense_opt=Adam(lr=3e-3))
     scfg = synth.SynthConfig(num_users=50, num_items=500, avg_len=40,
                              max_len=120, seed=5)
     with tempfile.TemporaryDirectory() as d:
@@ -97,7 +94,7 @@ def test_grm_trainer_end_to_end():
         for i, batch in enumerate(it):
             m = tr.train_step(batch)
             losses.append(m["loss"])
-            sizes.append(len(tr.features.tables[next(iter(tr.features.tables))]))
+            sizes.append(next(iter(engine.table_sizes().values())))
             if i >= 11:
                 break
     assert all(np.isfinite(losses))
@@ -180,12 +177,14 @@ def test_grm_pipelined_stream_matches_unpipelined():
     losses as step-by-step train_step (row indices are insert-stable)."""
     def build():
         cfg = ARCHS["grm-4g"].reduced()
-        feats = (FeatureConfig("item", cfg.d_model),
-                 FeatureConfig("user", cfg.d_model))
-        coll = HashTableCollection(feats, jax.random.PRNGKey(0),
-                                   capacity=1 << 12, chunk_rows=512)
-        return GRMTrainer(cfg=cfg, features=coll, dense_opt=Adam(lr=3e-3),
-                          sparse_opt=RowwiseAdam(lr=5e-2), accum_batches=2)
+        engine = EmbeddingEngine(
+            default_grm_features(cfg.d_model),
+            EngineConfig(backend="local-dynamic", capacity=1 << 12,
+                         chunk_rows=512, accum_batches=2),
+            jax.random.PRNGKey(0),
+            sparse_opt=RowwiseAdam(lr=5e-2),
+        )
+        return GRMTrainer(cfg=cfg, engine=engine, dense_opt=Adam(lr=3e-3))
 
     scfg = synth.SynthConfig(num_users=30, num_items=300, avg_len=32,
                              max_len=96, seed=7)

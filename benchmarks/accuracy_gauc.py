@@ -77,7 +77,10 @@ def _train_and_eval(backend: str, steps: int, static_capacity: int = 0) -> Dict:
         users, ys, ss = [], [[], []], [[], []]
         from repro.models.grm import grm_apply
         for batch in batches[-4:]:
-            vecs, _ = engine.lookup(engine.batch_features(batch))
+            # training already admitted every ID in these batches — skip the
+            # insert walk (assume_inserted fast path)
+            vecs, _ = engine.lookup(engine.batch_features(batch),
+                                    assume_inserted=True)
             ctx = jnp.mean(vecs["user"], axis=-2)
             emb = vecs["item"] + ctx[:, None, :]
             mask = jnp.asarray(batch["mask"])

@@ -72,6 +72,20 @@ class Table:
             out.append(",".join(_fmt(v) for v in r))
         return "\n".join(out)
 
+    def to_dict(self) -> Dict:
+        """Machine-readable form (benchmarks.run --json)."""
+        return {
+            "name": self.name,
+            "columns": list(self.columns),
+            "rows": [[_jsonable(v) for v in r] for r in self.rows],
+        }
+
+
+def _jsonable(v):
+    if hasattr(v, "item"):  # numpy / jax scalars
+        v = v.item()
+    return v
+
 
 def _fmt(v) -> str:
     if isinstance(v, float):

@@ -2,13 +2,17 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run fig16      # one benchmark
+    PYTHONPATH=src python -m benchmarks.run packed --json out.json
 
 Each benchmark emits a CSV table; absolute times are CPU wall-clock at smoke
 scale, relative gains are the reproduced paper artifacts, and roofline
-numbers are TPU-v5e projections from the analytic model.
+numbers are TPU-v5e projections from the analytic model. `--json <path>`
+additionally dumps every executed benchmark's table as machine-readable JSON
+({benchmark_key: {name, columns, rows}}) for CI artifacts and trend lines.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -23,13 +27,26 @@ BENCHMARKS = {
     "table3_dynamic_table": ("benchmarks.dynamic_table",
                              "Table 3 dynamic table vs MCH"),
     "fig17_scalability": ("benchmarks.scalability", "Fig. 17 scalability"),
+    "packed_vs_padded": ("benchmarks.packed_vs_padded",
+                         "Packed (jagged) vs padded GRM step"),
     "roofline": ("benchmarks.roofline", "§Roofline all 40 pairs"),
 }
 
 
 def main() -> int:
-    want = sys.argv[1:] or list(BENCHMARKS)
+    argv = sys.argv[1:]
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        try:
+            json_path = argv[i + 1]
+        except IndexError:
+            print("--json requires a path argument")
+            return 2
+        argv = argv[:i] + argv[i + 2:]
+    want = argv or list(BENCHMARKS)
     failures = []
+    tables = {}
     for key in want:
         matches = [k for k in BENCHMARKS if key in k]
         if not matches:
@@ -43,12 +60,17 @@ def main() -> int:
                 mod = __import__(mod_name, fromlist=["run"])
                 table = mod.run()
                 print(table.render())
+                tables[k] = table.to_dict()
                 print(f"[{k} done in {time.time() - t0:.1f}s]")
             except Exception as e:  # report and continue
                 import traceback
 
                 traceback.print_exc()
                 failures.append((k, str(e)))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(tables, f, indent=2)
+        print(f"\nwrote {len(tables)} table(s) to {json_path}")
     if failures:
         print(f"\n{len(failures)} benchmark(s) FAILED: {[f[0] for f in failures]}")
         return 1

@@ -52,10 +52,12 @@ def main(dim: int, dup_rate: float):
             jax.random.PRNGKey(0),
         )
         engine.insert({"item": jnp.asarray(universe)})
-        vecs, stats = engine.lookup({"item": q})  # compile+warm
+        # the universe is pre-inserted: assume_inserted skips the per-feature
+        # insert walk so the timed call measures the lookup path alone
+        vecs, stats = engine.lookup({"item": q}, assume_inserted=True)  # warm
         jax.block_until_ready(vecs["item"])
         t0 = time.perf_counter()
-        vecs, stats = engine.lookup({"item": q})
+        vecs, stats = engine.lookup({"item": q}, assume_inserted=True)
         jax.block_until_ready(vecs["item"])
         wall = time.perf_counter() - t0
         emb_bytes = int(stats.ids_sent) * dim * 4 * 2  # fetch + grad return

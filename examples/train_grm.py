@@ -10,7 +10,9 @@ stack -> engine-side sparse grad accumulation + rowwise Adam / dense Adam ->
 periodic elastic checkpoints (engine shards + dense params).
 
 Swap `--backend local-static` to train against the TorchRec-style fixed
-table the paper replaces — same trainer, one flag.
+table the paper replaces — same trainer, one flag. `--packed` switches the
+batch materialization and the whole dense fwd/bwd to the jagged single-
+stream layout (zero padding FLOPs; see docs/packed_execution.md).
 """
 import argparse
 import os
@@ -39,6 +41,8 @@ def main():
                     choices=["local-dynamic", "local-static"])
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--workdir", default=None)
+    ap.add_argument("--packed", action="store_true",
+                    help="jagged single-stream batches (no padding FLOPs)")
     args = ap.parse_args()
 
     cfg = ARCHS["grm-4g"] if args.full else ARCHS["grm-4g"].reduced()
@@ -60,7 +64,8 @@ def main():
         jax.random.PRNGKey(0),
         sparse_opt=RowwiseAdam(lr=2e-2),
     )
-    trainer = GRMTrainer(cfg=cfg, engine=engine, dense_opt=Adam(lr=1e-3))
+    trainer = GRMTrainer(cfg=cfg, engine=engine, dense_opt=Adam(lr=1e-3),
+                         packed=args.packed)
 
     workdir = args.workdir or tempfile.mkdtemp(prefix="grm_")
     data_dir = os.path.join(workdir, "shards")
@@ -72,7 +77,8 @@ def main():
 
     it = make_input_pipeline(paths, 0, 1, balanced=True,
                              target_tokens=avg_len * 16,
-                             pad_bucket=128 if args.full else 64)
+                             pad_bucket=128 if args.full else 64,
+                             packed=args.packed)
     t0 = time.time()
     tok_seen = 0
 

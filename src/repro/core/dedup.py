@@ -18,7 +18,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-PAD_ID = jnp.int64(-1)
+# Python int, NOT jnp.int64(-1): a jnp scalar built at import time allocates
+# a device buffer before the app can configure JAX, and under default
+# x64-disabled JAX it silently downcasts to int32. A plain -1 weak-types into
+# whatever dtype the surrounding op uses (int64 IDs stay int64).
+PAD_ID = -1
 
 
 class Unique(NamedTuple):

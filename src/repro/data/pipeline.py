@@ -20,6 +20,7 @@ from repro.data import synth
 from repro.data.sequence_balancing import (
     DynamicSequenceBatcher,
     FixedSizeBatcher,
+    pack_batch,
     pad_batch,
 )
 
@@ -80,10 +81,14 @@ def make_input_pipeline(
     pad_bucket: int = 128,
     prefetch: int = 2,
     max_batch: Optional[int] = None,
+    packed: bool = False,
+    seq_bucket: int = 8,
 ) -> Iterator[Dict[str, np.ndarray]]:
     """Per-device batch stream: shard read -> (dynamic | fixed) batching ->
-    padding -> prefetch. `balanced=True` is the paper's system; False is the
-    fixed-size baseline."""
+    (padded | packed) materialization -> prefetch. `balanced=True` is the
+    paper's system; False is the fixed-size baseline. `packed=True` emits the
+    jagged single-stream layout of `pack_batch` (zero padding FLOPs) instead
+    of the (B, S_max) rectangle."""
     mine = shard_files(paths, device_index, num_devices)
     chunks = chunk_stream(mine)
     if balanced:
@@ -92,5 +97,10 @@ def make_input_pipeline(
     else:
         assert batch_size > 0
         batcher = FixedSizeBatcher(batch_size)
-    batches = (pad_batch(b, 0, bucket=pad_bucket) for b in batcher.batches(chunks))
+    if packed:
+        batches = (pack_batch(b, bucket=pad_bucket, seq_bucket=seq_bucket)
+                   for b in batcher.batches(chunks))
+    else:
+        batches = (pad_batch(b, 0, bucket=pad_bucket)
+                   for b in batcher.batches(chunks))
     return iter(Prefetcher(batches, depth=prefetch))

@@ -129,8 +129,10 @@ def pad_batch(
     """Pack a balanced batch into fixed-shape arrays.
 
     Rows = sequences, padded to the longest (rounded up to `bucket` to bound
-    jit recompiles); over-target batches are truncated row-wise *never*
-    token-wise (the paper forbids sequence truncation — whole sequences only).
+    jit recompiles). Sequences are never truncated token-wise (the paper
+    forbids it — whole sequences only); batch *size* is bounded upstream by
+    the batcher's `max_batch` cap, not here — this function materializes
+    every sample it is given.
     Emits: item_ids (B, S) int64 (-1 pad), labels (B, S, 2) int8, mask (B, S),
     tokens () — the true token count for weighted gradient sync.
     """
@@ -153,6 +155,70 @@ def pad_batch(
         "mask": mask,
         "user_ids": user_ids,
         "tokens": tokens,
+        "batch_size": np.int32(B),
+    }
+
+
+def pack_batch(
+    samples: Sequence[Sample], bucket: int = 128, seq_bucket: int = 8
+) -> Dict[str, np.ndarray]:
+    """Materialize a balanced batch as ONE packed (jagged) token stream.
+
+    Instead of a (B, S_max) rectangle, sequences are concatenated into a
+    single (T,) stream — the only padding is the tail bucketing of the
+    *total* token count to `bucket` (bounds jit recompiles), so the fraction
+    of padding FLOPs is O(bucket / T) instead of O(1 - avg/max). The
+    sequence-slot count is bucketed to `seq_bucket` the same way (trailing
+    slots are empty sequences).
+
+    Emits:
+      item_ids  (T,)  int64, -1 at padding tokens
+      labels    (T, 2) int8
+      mask      (T,)  bool — valid (non-padding) tokens
+      seq_ids   (T,)  int32 sorted ascending; padding tokens get Bp (one past
+                      the last sequence slot) so they never join a real
+                      segment in the block-diagonal attention mask
+      positions (T,)  int32 within-sequence position (0 at padding)
+      offsets   (Bp+1,) int32 sequence start offsets (trailing slots empty).
+                Layout metadata: the compute path masks via seq_ids/positions;
+                offsets serve per-sequence slicing (readback, serving, debug)
+      user_ids  (Bp, ctx) int64, -1 at padding rows
+      tokens    ()    true token count (weighted gradient sync)
+      batch_size ()   number of real sequences
+    """
+    B = len(samples)
+    lengths = [int(s["length"]) for s in samples]
+    total = sum(lengths)
+    T = max(bucket, -(-total // bucket) * bucket)
+    Bp = max(seq_bucket, -(-B // seq_bucket) * seq_bucket)
+    item_ids = np.full((T,), -1, np.int64)
+    labels = np.zeros((T, 2), np.int8)
+    mask = np.zeros((T,), bool)
+    seq_ids = np.full((T,), Bp, np.int32)
+    positions = np.zeros((T,), np.int32)
+    offsets = np.full((Bp + 1,), total, np.int32)
+    off = 0
+    for i, s in enumerate(samples):
+        L = lengths[i]
+        offsets[i] = off
+        item_ids[off:off + L] = s["item_ids"]
+        labels[off:off + L] = s["labels"]
+        mask[off:off + L] = True
+        seq_ids[off:off + L] = i
+        positions[off:off + L] = np.arange(L, dtype=np.int32)
+        off += L
+    ctx = len(samples[0]["user_ids"])
+    user_ids = np.full((Bp, ctx), -1, np.int64)
+    user_ids[:B] = np.stack([s["user_ids"] for s in samples])
+    return {
+        "item_ids": item_ids,
+        "labels": labels,
+        "mask": mask,
+        "seq_ids": seq_ids,
+        "positions": positions,
+        "offsets": offsets,
+        "user_ids": user_ids,
+        "tokens": np.int32(total),
         "batch_size": np.int32(B),
     }
 

@@ -124,7 +124,11 @@ class EmbeddingEngine:
         return self.backend.table_emb(self.backend.table_of(feature))
 
     def lookup(
-        self, batch: Dict[str, jax.Array], step: int = 0, with_stats: bool = True
+        self,
+        batch: Dict[str, jax.Array],
+        step: int = 0,
+        with_stats: bool = True,
+        assume_inserted: bool = False,
     ) -> Tuple[Dict[str, jax.Array], LookupStats]:
         """Fused lookup + per-feature pooling.
 
@@ -132,12 +136,16 @@ class EmbeddingEngine:
         Dynamic backends insert unknown IDs first (the real-time path);
         static/vocab backends resolve only. Padding (-1) yields zero vectors.
         `with_stats=False` skips the dedup accounting on local backends —
-        use it on hot loops that discard the stats.
+        use it on hot loops that discard the stats. `assume_inserted=True`
+        skips the insert walk entirely — use it when the caller already ran
+        `insert` on this batch (trainer dispatch phase) or on read-only paths
+        (serving): unknown IDs then resolve to zero vectors instead of being
+        admitted.
         """
         feats = {f: jnp.asarray(ids) for f, ids in batch.items()}
         for f in feats:
             self._check(f)
-        if self.backend.dynamic:
+        if self.backend.dynamic and not assume_inserted:
             self.backend.insert(feats)
         raw, stats = self.backend.raw_lookup(feats, step, with_stats)
         out = {}

@@ -1,0 +1,134 @@
+"""Varlen (jagged) HSTU SiLU-attention Pallas kernel — the packed execution
+path (TurboGR-style zero-padding training).
+
+The padded kernel (hstu_attention.py) burns FLOPs on every (B, S_max)
+rectangle slot; after dynamic sequence balancing (§5.1) the batch is already
+token-budgeted, so here the batch is materialized as ONE packed token stream
+of shape (total_tokens, H, hd) plus per-token segment ids (sorted ascending,
+one id per sequence) and within-sequence positions. The attention mask is
+
+    block-diagonal (same segment)  ∩  causal (packed index order)
+
+which over a *sorted* segment stream is block-banded around the diagonal —
+exactly seg_sum.py's structure. Tile skipping therefore needs only two
+scalar reads per (q-tile, k-tile) pair:
+
+  * causal skip:   ki > qi                     (square tiles)
+  * segment skip:  seg_k[last] < seg_q[first]  (k-tile entirely before the
+                   q-tile's first sequence — no overlap possible)
+
+The fused epilogue (1/count normalization + ⊙U) from the padded kernel is
+kept: count for a packed token is its within-sequence position + 1, read
+straight from the positions stream — no mask reduction needed.
+
+Padding tokens inside the stream (tail bucketing) carry a segment id larger
+than every real id and position 0; their outputs are garbage-but-finite and
+masked out by the loss.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+# Python int (not a jnp scalar — no import-time allocation): > any real
+# segment id; pads the tile grid.
+_SENTINEL = 2**30
+
+
+def _kernel(seg_q_ref, seg_k_ref, pos_ref, q_ref, k_ref, v_ref, u_ref,
+            o_ref, acc_ref, *, block):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Two scalar reads decide the whole tile (segment ids are sorted):
+    # causal ∩ same-segment is empty iff ki > qi or the k-tile's last segment
+    # precedes the q-tile's first segment.
+    @pl.when((ki <= qi) & (seg_k_ref[block - 1] >= seg_q_ref[0]))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (block, hd)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (block, block)
+        seg_q = seg_q_ref[...]
+        seg_k = seg_k_ref[...]
+        qg = qi * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+        kg = ki * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+        mask = (seg_q[:, None] == seg_k[None, :]) & (kg <= qg)
+        w = jnp.where(mask, jax.nn.silu(s), 0.0)
+        acc_ref[...] += jax.lax.dot_general(
+            w, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    # Fused epilogue: 1/count + ⊙U. count = within-sequence position + 1.
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        count = jnp.maximum(pos_ref[...] + 1, 1).astype(jnp.float32)
+        u = u_ref[0].astype(jnp.float32)
+        o_ref[0] = ((acc_ref[...] / count[:, None]) * u).astype(o_ref.dtype)
+
+
+def jagged_hstu_attention_fused(
+    q: jax.Array,  # (T, H, hd) packed token stream
+    k: jax.Array,
+    v: jax.Array,
+    u: jax.Array,
+    seq_ids: jax.Array,  # (T,) int32 sorted ascending; padding >= num real seqs
+    positions: jax.Array,  # (T,) int32 within-sequence position (0-based)
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Block-diagonal ∩ causal fused SiLU attention over a packed stream.
+
+    Returns (T, H, hd). Semantics match ref.jagged_hstu_attention_ref.
+    """
+    T, H, hd = q.shape
+    block = min(block, max(8, T))
+
+    def to_ht(x):  # (T, H, hd) -> (H, T, hd)
+        return x.transpose(1, 0, 2)
+
+    qb, kb, vb, ub = map(to_ht, (q, k, v, u))
+    pad_t = (-T) % block
+    pad_d = (-hd) % 128 if not interpret else 0
+    if pad_t or pad_d:
+        padw = ((0, 0), (0, pad_t), (0, pad_d))
+        qb, kb, vb, ub = (jnp.pad(x, padw) for x in (qb, kb, vb, ub))
+    seg = jnp.pad(seq_ids.astype(jnp.int32), (0, pad_t),
+                  constant_values=_SENTINEL)
+    pos = jnp.pad(positions.astype(jnp.int32), (0, pad_t))
+    Tp, hdp = T + pad_t, hd + pad_d
+
+    grid = (H, Tp // block, Tp // block)
+    spec_q = pl.BlockSpec((1, block, hdp), lambda h, qi, ki: (h, qi, 0))
+    spec_k = pl.BlockSpec((1, block, hdp), lambda h, qi, ki: (h, ki, 0))
+    spec_sq = pl.BlockSpec((block,), lambda h, qi, ki: (qi,))
+    spec_sk = pl.BlockSpec((block,), lambda h, qi, ki: (ki,))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block=block),
+        grid=grid,
+        in_specs=[spec_sq, spec_sk, spec_sq, spec_q, spec_k, spec_k, spec_q],
+        out_specs=spec_q,
+        out_shape=jax.ShapeDtypeStruct((H, Tp, hdp), q.dtype),
+        scratch_shapes=[_vmem((block, hdp))],
+        interpret=interpret,
+    )(seg, seg, pos, qb, kb, vb, ub)
+
+    return out[:, :T, :hd].transpose(1, 0, 2)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

@@ -47,6 +47,31 @@ def hstu_attention(
     return R.hstu_attention_ref(q, k, v, u, q_pos, k_pos)
 
 
+def jagged_hstu_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, u: jax.Array,
+    seq_ids: jax.Array, positions: jax.Array,
+    *, chunk: int = 1024, impl: str = "auto",
+) -> jax.Array:
+    """Packed (varlen) HSTU attention over one (T, H, hd) token stream.
+
+    `seq_ids` are sorted per-token sequence ids (block-diagonal mask),
+    `positions` the within-sequence positions (causal count). Zero padding
+    FLOPs on the Pallas path: cross-sequence tiles are skipped via two scalar
+    reads, exactly like seg_sum's band check. Long streams on the ref path
+    stream over K chunks (memory O(T·chunk), never the full (T, T) matrix).
+    """
+    mode = _resolve(impl)
+    if mode in ("pallas", "interpret"):
+        from repro.kernels.jagged_hstu_attention import jagged_hstu_attention_fused
+
+        return jagged_hstu_attention_fused(
+            q, k, v, u, seq_ids, positions, interpret=(mode == "interpret")
+        )
+    if q.shape[0] > 2 * chunk:
+        return R.jagged_hstu_attention_chunked(q, k, v, u, seq_ids, positions, chunk)
+    return R.jagged_hstu_attention_ref(q, k, v, u, seq_ids, positions)
+
+
 def seg_sum(
     grads: jax.Array, seg_ids: jax.Array, num_segments: int, *, impl: str = "auto"
 ) -> jax.Array:

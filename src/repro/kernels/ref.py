@@ -67,6 +67,67 @@ def hstu_attention_chunked(
     return (out * u.astype(jnp.float32)).astype(q.dtype)
 
 
+def jagged_hstu_attention_ref(
+    q: jax.Array,  # (T, H, hd) packed token stream
+    k: jax.Array,  # (T, H, hd)
+    v: jax.Array,  # (T, H, hd)
+    u: jax.Array,  # (T, H, hd) — the ⊙U epilogue operand
+    seq_ids: jax.Array,  # (T,) int32 sorted ascending (padding >= real seqs)
+    positions: jax.Array,  # (T,) int32 within-sequence position (0-based)
+) -> jax.Array:
+    """Packed (jagged) HSTU attention: block-diagonal ∩ causal over one
+    token stream. count_t = positions[t] + 1 (every earlier token of the same
+    sequence is attended), matching the Pallas kernel exactly — including at
+    padding tokens, so full-array parity tests need no masking."""
+    T = q.shape[0]
+    s = jnp.einsum("qhd,khd->hqk", q, k, preferred_element_type=jnp.float32)
+    idx = jnp.arange(T, dtype=jnp.int32)
+    mask = (seq_ids[:, None] == seq_ids[None, :]) & (idx[None, :] <= idx[:, None])
+    w = jnp.where(mask[None], jax.nn.silu(s), 0.0)
+    count = jnp.maximum(positions + 1, 1).astype(jnp.float32)
+    out = jnp.einsum("hqk,khd->qhd", w, v.astype(jnp.float32))
+    out = out / count[:, None, None]
+    return (out * u.astype(jnp.float32)).astype(q.dtype)
+
+
+def jagged_hstu_attention_chunked(
+    q: jax.Array, k: jax.Array, v: jax.Array, u: jax.Array,
+    seq_ids: jax.Array, positions: jax.Array, chunk: int,
+) -> jax.Array:
+    """Streaming form of jagged_hstu_attention_ref (memory O(T * chunk) per
+    head instead of O(T²)); SiLU attention is linear in V so accumulation
+    needs no online-max. Chunk padding carries seq_id -2, which matches
+    neither real sequences nor the stream's own tail padding."""
+    T, H, hd = q.shape
+    n_chunks = -(-T // chunk)
+    pad = n_chunks * chunk - T
+    if pad:
+        padw = ((0, pad), (0, 0), (0, 0))
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+        seq_k = jnp.pad(seq_ids, (0, pad), constant_values=-2)
+    else:
+        seq_k = seq_ids
+    idx_q = jnp.arange(T, dtype=jnp.int32)
+    kc = k.reshape(n_chunks, chunk, H, hd)
+    vc = v.reshape(n_chunks, chunk, H, hd)
+    sc = seq_k.reshape(n_chunks, chunk)
+    ic = jnp.arange(n_chunks * chunk, dtype=jnp.int32).reshape(n_chunks, chunk)
+
+    def step(acc, blk):
+        kb, vb, sb, ib = blk
+        s = jnp.einsum("qhd,khd->hqk", q, kb, preferred_element_type=jnp.float32)
+        mask = (seq_ids[:, None] == sb[None, :]) & (ib[None, :] <= idx_q[:, None])
+        w = jnp.where(mask[None], jax.nn.silu(s), 0.0)
+        return acc + jnp.einsum("hqk,khd->qhd", w, vb.astype(jnp.float32)), None
+
+    acc0 = jnp.zeros((T, H, hd), jnp.float32)
+    acc, _ = jax.lax.scan(step, acc0, (kc, vc, sc, ic))
+    count = jnp.maximum(positions + 1, 1).astype(jnp.float32)
+    out = acc / count[:, None, None]
+    return (out * u.astype(jnp.float32)).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Sorted segment sum (sparse gradient accumulation, paper §5.2)
 # ---------------------------------------------------------------------------

@@ -50,6 +50,28 @@ def grm_apply(
     return mmoe_apply(params["mmoe"], x, cfg)  # (B, S, num_tasks)
 
 
+def grm_apply_packed(
+    params: Dict[str, Any],
+    emb: jax.Array,  # (T, d) packed token-stream embeddings
+    seq_ids: jax.Array,  # (T,) int32 sorted per-token sequence ids
+    positions: jax.Array,  # (T,) int32 within-sequence positions
+    mask: jax.Array,  # (T,) bool — valid (non-padding) tokens
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Packed (jagged) forward: identical math to `grm_apply` on the valid
+    tokens, but computed over ONE (T,) token stream with zero padding FLOPs.
+    Consumes the same parameter tree (scan/tail stack structure) as the
+    padded path — `apply_stack(seq_ids=...)` is the shared orchestrator —
+    so either path can run against the same trainer state.
+    """
+    x = emb.astype(jnp.dtype(cfg.dtype)) * mask[:, None].astype(cfg.dtype)
+    x, _, _ = apply_stack(
+        params["stack"], x, positions, cfg, mode="train", seq_ids=seq_ids
+    )
+    x = L.layer_norm(params["final_norm"], x, cfg.norm_eps)
+    return mmoe_apply(params["mmoe"], x[None], cfg)[0]  # (T, num_tasks)
+
+
 def grm_loss(
     logits: jax.Array,  # (B, S, T)
     labels: jax.Array,  # (B, S, T) in {0, 1}

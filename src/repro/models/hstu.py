@@ -82,6 +82,27 @@ class HSTUBlock:
         return x + y, new_cache, jnp.float32(0.0)
 
     @staticmethod
+    def apply_packed(p, x, seq_ids, positions, cfg):
+        """Packed (jagged) training forward: x is ONE (T, d) token stream,
+        `seq_ids` sorted per-token sequence ids, `positions` within-sequence
+        positions. Norms and projections are token-wise so they run on the
+        stream unchanged; only the attention needs the segment structure
+        (block-diagonal ∩ causal — ops.jagged_hstu_attention). No (B, S_max)
+        rectangle is ever materialized: zero padding FLOPs."""
+        from repro.kernels import ops  # kernels never import models
+
+        T, d = x.shape
+        H, hd = cfg.num_heads, cfg.hd
+        xn = L.layer_norm(p["norm"], x, cfg.norm_eps)
+        uqkv = jax.nn.silu(jnp.einsum("td,dfhk->tfhk", xn, p["win"]))  # φ1
+        u, q, k, v = (uqkv[:, i] for i in range(4))  # each (T, H, hd)
+        o = ops.jagged_hstu_attention(q, k, v, u, seq_ids, positions,
+                                      chunk=cfg.attn_chunk)
+        g = L.layer_norm(p["onorm"], o.reshape(T, H * hd), cfg.norm_eps)
+        y = jnp.einsum("thk,hkd->td", g.reshape(T, H, hd), p["wout"])
+        return x + y
+
+    @staticmethod
     def init_cache(cfg: ModelConfig, batch: int, length: int, window: int):
         dt = jnp.dtype(cfg.dtype)
         shape = (batch, cfg.num_heads, length, cfg.hd)

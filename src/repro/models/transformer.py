@@ -211,7 +211,15 @@ def apply_stack(
     caches: Optional[Dict[str, Any]] = None,
     cache_pos: Optional[jax.Array] = None,
     dist: Optional[DistContext] = None,
+    seq_ids: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    """With `seq_ids` supplied, x is ONE packed (T, d) token stream and every
+    block runs its `apply_packed` path (`positions` are then within-sequence
+    positions) — same scan/tail/remat orchestration, zero padding FLOPs.
+    """
+    assert seq_ids is None or dist is None, (
+        "packed mode has no sharded-activation path yet (see ROADMAP)"
+    )
     cycle, n_cycles, tail = stack_split(cfg)
     want_caches = mode in ("prefill", "decode")
     new_caches: Dict[str, Any] = {"scan": [], "tail": []}
@@ -222,15 +230,25 @@ def apply_stack(
             # pin the residual stream's sharding so batch sharding survives
             # the backward pass (see DistContext.act_spec)
             x = dist.constrain_acts(x)
-        fn = functools.partial(
-            block_cls(kind).apply,
-            positions=positions,
-            cfg=cfg,
-            window=_window_for(cfg, kind),
-            mode=mode,
-            cache_pos=cache_pos,
-            dist=dist,
-        )
+        if seq_ids is not None:
+            blk = block_cls(kind)
+            assert hasattr(blk, "apply_packed"), (
+                f"block kind {kind!r} has no packed (jagged) path"
+            )
+
+            def fn(p_, x_, cache=None):
+                return (blk.apply_packed(p_, x_, seq_ids, positions, cfg),
+                        None, jnp.float32(0.0))
+        else:
+            fn = functools.partial(
+                block_cls(kind).apply,
+                positions=positions,
+                cfg=cfg,
+                window=_window_for(cfg, kind),
+                mode=mode,
+                cache_pos=cache_pos,
+                dist=dist,
+            )
         if cfg.remat and mode == "train":
             return jax.checkpoint(
                 lambda p_, x_, c_: fn(p_, x_, cache=c_),

@@ -33,7 +33,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.embedding import EmbeddingEngine, FeatureConfig
-from repro.models.grm import grm_apply, grm_loss, grm_param_defs
+from repro.models.grm import grm_apply, grm_apply_packed, grm_loss, grm_param_defs
 from repro.optim.adam import Adam, global_norm
 from repro.common.params import init_params
 
@@ -43,6 +43,7 @@ class GRMTrainer:
     cfg: ModelConfig
     engine: EmbeddingEngine  # unified sparse facade (all feature access)
     dense_opt: Adam
+    packed: bool = False  # jagged single-stream batches (pack_batch layout)
 
     def __post_init__(self):
         key = jax.random.PRNGKey(0)
@@ -66,6 +67,12 @@ class GRMTrainer:
         """Compute-stream work: enqueue the jitted fwd+bwd (non-blocking —
         jax dispatch is async; the host returns immediately)."""
         embs = {f: self.engine.emb_of(f) for f in rows}
+        if self.packed:
+            return self._step_fn(
+                self.dense_params, embs, rows,
+                jnp.asarray(batch["labels"]), jnp.asarray(batch["mask"]),
+                jnp.asarray(batch["seq_ids"]), jnp.asarray(batch["positions"]),
+            )
         return self._step_fn(
             self.dense_params, embs, rows,
             jnp.asarray(batch["labels"]), jnp.asarray(batch["mask"]),
@@ -104,14 +111,24 @@ class GRMTrainer:
         yield self._finish(cur_rows, self._dispatch_dense(cur, cur_rows))
 
 
-def _grm_step(dense_params, embs, rows, labels, mask, *, cfg: ModelConfig):
+def _grm_step(dense_params, embs, rows, labels, mask, seq_ids=None,
+              positions=None, *, cfg: ModelConfig):
     """Jitted: gather every feature -> dense forward -> loss -> (dense grads,
     per-slot embedding grads for every feature).
 
     Input composition (paper §2, Fig. 3): `item` is the positional action
     sequence; every other feature (the contextual `user` sub-sequence) is
     mean-pooled over its valid slots and broadcast-added to all positions.
+
+    With `seq_ids`/`positions` supplied, the batch is one (T,) jagged token
+    stream (pack_batch layout) instead of a (B, S_max) rectangle, so the
+    forward/backward spends zero FLOPs on padding. The embedding
+    gather/scatter reuses the exact same EmbeddingEngine row handles — only
+    the shapes change: `item` rows are (T,), contextual features stay
+    (Bp, ctx) and broadcast to tokens through a seq_ids gather instead of
+    `[:, None, :]`. The two layouts match to fp32 tolerance.
     """
+    packed = seq_ids is not None
 
     gathered = {}
     for f, emb_table in embs.items():
@@ -122,16 +139,23 @@ def _grm_step(dense_params, embs, rows, labels, mask, *, cfg: ModelConfig):
         ).astype(jnp.float32)
 
     def loss_fn(dp, g):
-        x = g["item"]
+        x = g["item"]  # (B, S, d) padded | (T, d) packed
         for f, gv in g.items():
             if f == "item":
                 continue
             fvalid = (rows[f] >= 0).astype(jnp.float32)[..., None]
             ctx = jnp.sum(gv * fvalid, axis=-2) / jnp.maximum(
                 jnp.sum(fvalid, axis=-2), 1.0
-            )
-            x = x + ctx[:, None, :]
-        logits = grm_apply(dp, x, mask, cfg)
+            )  # per-sequence contextual pooling
+            if packed:
+                seg = jnp.minimum(seq_ids, ctx.shape[0] - 1)  # pad clamp
+                x = x + ctx[seg]
+            else:
+                x = x + ctx[:, None, :]
+        if packed:
+            logits = grm_apply_packed(dp, x, seq_ids, positions, mask, cfg)
+        else:
+            logits = grm_apply(dp, x, mask, cfg)
         loss_sum, m = grm_loss(logits, labels, mask)
         return loss_sum / jnp.maximum(m["weight"], 1.0), m
 

@@ -18,6 +18,7 @@ from repro.data.sequence_balancing import (
     DynamicSequenceBatcher,
     FixedSizeBatcher,
     imbalance_stats,
+    pack_batch,
     pad_batch,
 )
 
@@ -121,6 +122,74 @@ def test_pad_batch_shapes_and_mask():
     # padding is -1 and masked out
     assert (out["item_ids"][out["mask"]] >= 0).all()
     assert (out["item_ids"][~out["mask"]] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# Packed (jagged) materialization
+# ---------------------------------------------------------------------------
+
+
+def test_pack_batch_layout():
+    lengths = [5, 130, 63, 1]
+    samples = _mk_samples(lengths)
+    out = pack_batch(samples, bucket=64, seq_bucket=8)
+    total = sum(lengths)
+    T = out["item_ids"].shape[0]
+    assert T == 256  # 199 tail-bucketed to 64-multiple
+    assert out["tokens"] == total and out["batch_size"] == 4
+    assert out["mask"].sum() == total
+    # valid region: concatenated sequences, in order, nothing lost
+    np.testing.assert_array_equal(
+        out["item_ids"][: lengths[0]], np.arange(lengths[0]))
+    assert (out["item_ids"][~out["mask"]] == -1).all()
+    # seq_ids sorted ascending; padding sits past the last real sequence
+    assert (np.diff(out["seq_ids"]) >= 0).all()
+    assert (out["seq_ids"][out["mask"]] < 4).all()
+    assert (out["seq_ids"][~out["mask"]] == 8).all()
+    # per-sequence positions restart at 0 and offsets delimit each sequence
+    off = out["offsets"]
+    assert off.shape == (9,)
+    for i, L in enumerate(lengths):
+        assert off[i + 1] - off[i] == L
+        np.testing.assert_array_equal(
+            out["positions"][off[i]:off[i] + L], np.arange(L))
+    assert (off[5:] == total).all()  # trailing slots empty
+    # user rows padded with -1
+    assert out["user_ids"].shape[0] == 8
+    assert (out["user_ids"][4:] == -1).all()
+
+
+def test_pack_batch_matches_pad_batch_tokens():
+    """Both materializations carry the same valid tokens/labels, just in
+    different layouts."""
+    lengths = [3, 17, 9]
+    samples = _mk_samples(lengths)
+    padded = pad_batch(samples, 0, bucket=16)
+    packed = pack_batch(samples, bucket=16, seq_bucket=4)
+    flat_ids = np.concatenate(
+        [padded["item_ids"][i, :L] for i, L in enumerate(lengths)])
+    np.testing.assert_array_equal(packed["item_ids"][packed["mask"]], flat_ids)
+    assert packed["tokens"] == padded["tokens"]
+
+
+def test_packed_pipeline_end_to_end():
+    cfg = synth.SynthConfig(num_users=50, num_items=500, avg_len=40,
+                            max_len=160, seed=9)
+    with tempfile.TemporaryDirectory() as d:
+        paths = synth.write_shards(cfg, d, num_shards=2, samples_per_shard=40)
+        batches = list(
+            make_input_pipeline(paths, 0, 1, balanced=True,
+                                target_tokens=40 * 8, pad_bucket=64,
+                                packed=True)
+        )
+        assert batches
+        for b in batches:
+            assert b["item_ids"].ndim == 1  # single stream, no rectangle
+            assert b["item_ids"].shape[0] % 64 == 0
+            assert b["mask"].sum() == int(b["tokens"])
+        total = sum(int(b["tokens"]) for b in batches)
+        expect = sum(int(s["length"]) for p in paths for s in synth.read_shard(p))
+        assert total == expect
 
 
 # ---------------------------------------------------------------------------

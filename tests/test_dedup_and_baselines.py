@@ -27,6 +27,24 @@ class TestUniqueStatic:
         assert float(dedup.dedup_ratio(ids)) == 0.75
         assert float(dedup.dedup_ratio(jnp.array([1, 2, 3, 4], jnp.int64))) == 0.0
 
+    def test_pad_id_is_python_int(self):
+        """PAD_ID must be a plain int: a jnp scalar built at import time
+        allocates before JAX is configured and, under x64-disabled JAX,
+        silently becomes int32."""
+        assert type(dedup.PAD_ID) is int and dedup.PAD_ID == -1
+
+    def test_unique_static_full_int64_range(self):
+        """IDs beyond int32 range (hashed 64-bit feature IDs) must dedup
+        without truncation-induced collisions."""
+        big = 2**40
+        ids = jnp.array([big, big + 1, big, -1, big + 1], jnp.int64)
+        assert ids.dtype == jnp.int64
+        u = dedup.unique_static(ids, size=5)
+        assert u.ids.dtype == jnp.int64
+        assert int(u.count) == 2
+        np.testing.assert_array_equal(
+            np.asarray(dedup.restore(u.ids, u.inverse)), np.asarray(ids))
+
     @settings(max_examples=30, deadline=None)
     @given(st.lists(st.integers(min_value=-1, max_value=50), min_size=1, max_size=64))
     def test_property_restore_exact(self, ids):

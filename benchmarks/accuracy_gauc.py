@@ -6,8 +6,9 @@ trajectory as the baseline (correctness), while the static table degrades
 when feature IDs overflow its capacity (default-embedding fallback, §4.1).
 We reproduce both: parity on ample capacity, degradation under overflow.
 
-With the unified EmbeddingEngine the two systems are the SAME trainer — only
-the `EngineConfig.backend` string differs (the facade's whole point).
+With the unified TrainSession + EmbeddingEngine the two systems are the
+SAME session — only the `EngineConfig.backend` string differs (the
+facade's whole point).
 """
 from __future__ import annotations
 
@@ -22,10 +23,8 @@ from benchmarks.common import Table
 from repro.configs.registry import ARCHS
 from repro.data import synth
 from repro.data.pipeline import make_input_pipeline
-from repro.embedding import EmbeddingEngine, EngineConfig
-from repro.optim.adam import Adam
-from repro.optim.rowwise_adam import RowwiseAdam
-from repro.train.grm_trainer import GRMTrainer, default_grm_features
+from repro.embedding import EngineConfig
+from repro.train.session import SessionConfig, TrainSession
 
 
 def gauc(user_ids: np.ndarray, labels: np.ndarray, scores: np.ndarray) -> float:
@@ -50,27 +49,27 @@ def _train_and_eval(backend: str, steps: int, static_capacity: int = 0) -> Dict:
     cfg = ARCHS["grm-4g"].reduced()
     scfg = synth.SynthConfig(num_users=40, num_items=800, avg_len=48,
                              max_len=160, seed=11)
-    engine = EmbeddingEngine(
-        default_grm_features(cfg.d_model),
-        EngineConfig(backend=backend, capacity=1 << 12, chunk_rows=512,
-                     static_capacity=static_capacity or (1 << 20),
-                     accum_batches=1),
-        jax.random.PRNGKey(0),
-        sparse_opt=RowwiseAdam(lr=5e-2),
-    )
-    tr = GRMTrainer(cfg=cfg, engine=engine, dense_opt=Adam(lr=3e-3))
+    tr = TrainSession(SessionConfig(
+        model=cfg,
+        engine=EngineConfig(backend=backend, capacity=1 << 12, chunk_rows=512,
+                            static_capacity=static_capacity or (1 << 20),
+                            accum_batches=1),
+        dense_lr=3e-3,
+        sparse_lr=5e-2,
+    ))
+    engine = tr.engine
 
     with tempfile.TemporaryDirectory() as d:
         paths = synth.write_shards(scfg, d, num_shards=2, samples_per_shard=80)
-        it = make_input_pipeline(paths, 0, 1, balanced=True,
-                                 target_tokens=48 * 8, pad_bucket=64)
-        batches = []
-        losses = []
-        for i, batch in enumerate(it):
-            if i >= steps:
-                break
-            batches.append(batch)
-            losses.append(tr.train_step(batch)["loss"])
+        with make_input_pipeline(paths, 0, 1, balanced=True,
+                                 target_tokens=48 * 8, pad_bucket=64) as it:
+            batches = []
+            losses = []
+            for i, batch in enumerate(it):
+                if i >= steps:
+                    break
+                batches.append(batch)
+                losses.append(tr.train_step(batch)["loss"])
 
         # eval GAUC on the last few batches (same forward as training:
         # item sequence + mean-pooled contextual user embedding)

@@ -54,6 +54,18 @@ def run_worker(script: str, *args: str, devices: int = 8, timeout: int = 900) ->
     return proc.stdout
 
 
+def write_bench_json(name: str, payload: Dict) -> str:
+    """Write a repo-root BENCH_<name>.json trajectory artifact (the same
+    machine-readable convention as BENCH_packed.json: rewritten on every
+    run, uploaded by CI, diffed across PRs for trend lines)."""
+    import json
+
+    path = os.path.join(os.path.dirname(__file__), "..", f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return path
+
+
 class Table:
     """Tiny CSV table accumulator; every benchmark emits one."""
 

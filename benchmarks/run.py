@@ -9,6 +9,13 @@ scale, relative gains are the reproduced paper artifacts, and roofline
 numbers are TPU-v5e projections from the analytic model. `--json <path>`
 additionally dumps every executed benchmark's table as machine-readable JSON
 ({benchmark_key: {name, columns, rows}}) for CI artifacts and trend lines.
+
+Some benchmarks also write repo-root BENCH_<name>.json trajectory artifacts
+(common.write_bench_json): packed_vs_padded -> BENCH_packed.json,
+fig17_scalability -> BENCH_scalability.json (analytic model + measured
+multi-device TrainSession rows), fig14_seq_balancing ->
+BENCH_seq_balancing.json. CI uploads them so multi-device numbers are
+recorded per commit.
 """
 from __future__ import annotations
 

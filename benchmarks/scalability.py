@@ -2,23 +2,35 @@
 varying (a) computational complexity (GRM 4G vs 110G) and (b) embedding
 dimension factor (2D vs 64D), baseline 8 GPUs.
 
-Step-time model (no multi-node hardware in this container), using the
-*paper's* environment constants — A100 SXM4, NVLink 600 GB/s within a node,
-InfiniBand 200 GB/s per 8-GPU node across nodes:
+Two parts:
 
-  step(n) = compute + lookup_HBM + emb_all_to_all(n) + dense_all_reduce(n)
+1. The analytic step-time model (no multi-node hardware in this container),
+   using the *paper's* environment constants — A100 SXM4, NVLink 600 GB/s
+   within a node, InfiniBand 200 GB/s per 8-GPU node across nodes:
 
-where the all-to-all traffic that crosses node boundaries ((n-8)/n of it for
-n>8) is limited by the per-GPU share of the node NIC. The model reproduces
-the paper's three findings: (1) sublinear scaling from communication (62–79%
-of ideal at 128 GPUs), (2) mild degradation when complexity grows 27.5×,
-(3) embedding dimension hurting scalability more than compute does.
+     step(n) = compute + lookup_HBM + emb_all_to_all(n) + dense_all_reduce(n)
+
+   where the all-to-all traffic that crosses node boundaries ((n-8)/n of it
+   for n>8) is limited by the per-GPU share of the node NIC. The model
+   reproduces the paper's three findings: (1) sublinear scaling from
+   communication (62–79% of ideal at 128 GPUs), (2) mild degradation when
+   complexity grows 27.5×, (3) embedding dimension hurting scalability more
+   than compute does.
+
+2. MEASURED rows (`measured=True`): the unified `TrainSession` running the
+   real weighted-sync workflow on forced host-device meshes (1/2/4 devices,
+   subprocess workers) — CPU emulation numbers, but recorded into
+   BENCH_scalability.json so the bench trajectory carries real multi-device
+   session measurements from day one (they become true scaling curves on a
+   real mesh).
 """
 from __future__ import annotations
 
+import json
+
 import numpy as np
 
-from benchmarks.common import Table
+from benchmarks.common import Table, run_worker, write_bench_json
 
 # Paper environment (§6.1): A100 SXM4 80GB, NVLink 600 GB/s, IB 200 GB/s/node.
 A100_FLOPS = 312e12 * 0.45  # bf16 peak × achievable MFU on GRM kernels
@@ -69,7 +81,18 @@ def step_time(gflops: int, dim_factor: int, n_dev: int) -> float:
     return max(compute_path, OVERLAP * comm_path) + (1 - OVERLAP) * comm_path
 
 
-def run() -> Table:
+def measured_session_rows(devices=(1, 2, 4), steps: int = 6):
+    """Real `TrainSession` steps on forced host-device meshes (subprocess
+    workers so the bench process keeps the single real CPU device)."""
+    rows = []
+    for d in devices:
+        out = run_worker("session_worker.py", str(d), str(steps),
+                         "padded", "weighted", devices=d)
+        rows.append(json.loads(out.strip().splitlines()[-1]))
+    return rows
+
+
+def run(measured: bool = True) -> Table:
     t = Table(
         "fig17_scalability",
         ["series", "devices", "speedup", "ideal", "pct_of_ideal"],
@@ -77,6 +100,7 @@ def run() -> Table:
     series = [
         ("4G_1D", 4, 1), ("110G_1D", 110, 1), ("4G_2D", 4, 2), ("4G_64D", 4, 64),
     ]
+    model_rows = []
     for name, g, dimf in series:
         t8 = step_time(g, dimf, 8)
         for n in (8, 16, 32, 64, 128):
@@ -85,6 +109,27 @@ def run() -> Table:
             ideal = n / 8
             t.add(name, n, round(speedup, 2), ideal,
                   f"{100 * speedup / ideal:.1f}%")
+            model_rows.append({"series": name, "devices": n,
+                               "speedup": round(speedup, 2), "ideal": ideal})
+
+    session_rows = []
+    if measured:
+        session_rows = measured_session_rows()
+        base = session_rows[0]["step_time_ms"]
+        for r in session_rows:
+            # CPU-emulated: devices share one core, so "speedup" here tracks
+            # emulation overhead; the column exists for trajectory continuity.
+            t.add(f"session_cpu_{r['layout']}", r["devices"],
+                  round(base / r["step_time_ms"], 3), 1,
+                  f"{r['step_time_ms']}ms/step")
+
+    write_bench_json("scalability", {
+        "benchmark": "fig17_scalability",
+        "model_rows": model_rows,
+        "measured_session_rows": session_rows,
+        "note": "measured rows are forced-host-device CPU emulation; see "
+                "benchmarks/workers/session_worker.py",
+    })
     return t
 
 

@@ -14,13 +14,10 @@ from __future__ import annotations
 
 from typing import List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Table, timeit
+from benchmarks.common import Table, timeit, write_bench_json
 from repro.configs.registry import ARCHS
-from repro.common.params import init_params
 from repro.data import synth
 from repro.data.sequence_balancing import (
     DynamicSequenceBatcher,
@@ -28,7 +25,8 @@ from repro.data.sequence_balancing import (
     imbalance_stats,
     pad_batch,
 )
-from repro.models.grm import grm_apply, grm_param_defs
+from repro.embedding import EngineConfig
+from repro.train.session import SessionConfig, TrainSession
 
 AVG_LEN = 600
 MAX_LEN = 3000
@@ -54,16 +52,28 @@ def _device_token_streams(n_devices: int, batcher_fn, n_steps: int,
 
 
 def _measure_step_coeffs() -> tuple[float, float]:
-    """Per-token linear + per-token² attention cost of the reduced GRM on CPU
-    (seconds). Fit t(S) = a*S + b*S² from two sequence lengths."""
-    cfg = ARCHS["grm-4g"].reduced()
-    params = init_params(jax.random.PRNGKey(0), grm_param_defs(cfg))
+    """Per-token linear + per-token² attention cost of one full session
+    train step (sparse phase + dense fwd/bwd + updates) of the reduced GRM
+    on CPU (seconds). Fit t(S) = a*S + b*S² from two sequence lengths —
+    measured through the same `TrainSession.train_step` the simulated
+    devices would run, so the coefficients carry the whole per-step cost."""
+    session = TrainSession(SessionConfig(
+        model=ARCHS["grm-4g"].reduced(),
+        engine=EngineConfig(backend="local-dynamic", capacity=1 << 13,
+                            chunk_rows=1024, accum_batches=1),
+    ))
+    scfg = synth.SynthConfig(num_users=16, num_items=4096, avg_len=64,
+                             max_len=600, seed=0)
     times = {}
     for S in (256, 512):
-        emb = jnp.ones((1, S, cfg.d_model), jnp.float32) * 0.01
-        mask = jnp.ones((1, S), bool)
-        f = jax.jit(lambda p, e: grm_apply(p, e, mask, cfg))
-        times[S] = timeit(lambda: f(params, emb), warmup=1, iters=3)
+        samples = synth.generate_samples(scfg, 1, seed=S)
+        s = samples[0]
+        s["item_ids"] = np.arange(S, dtype=np.int64) + S * 1000
+        s["labels"] = np.zeros((S, 2), np.int8)
+        s["length"] = np.int32(S)
+        batch = pad_batch([s], 0, bucket=S)
+        times[S] = timeit(lambda: session.train_step(batch),
+                          warmup=1, iters=3)
     s1, s2 = 256, 512
     b = (times[s2] / s2 - times[s1] / s1) / (s2 - s1)
     a = times[s1] / s1 - b * s1
@@ -101,6 +111,12 @@ def run(n_steps: int = 40) -> Table:
             t.add(n_dev, mode, stats["min"], stats["max"], stats["spread"],
                   round(bsz, 1), round(min(util, 1.0), 3), round(thpt, 1),
                   f"{gain:.3f}x" if mode == "balanced" else "1x")
+    write_bench_json("seq_balancing", {
+        "benchmark": "fig14_15_table2_seq_balancing",
+        "step_coeffs": {"per_token_s": a, "per_token_sq_s": b,
+                        "source": "TrainSession.train_step (CPU, reduced)"},
+        "table": t.to_dict(),
+    })
     return t
 
 

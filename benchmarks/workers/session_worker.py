@@ -1,0 +1,77 @@
+"""Scalability worker: a short multi-device `TrainSession` run on a forced
+host-device mesh. Prints one JSON line:
+
+    {"devices": D, "layout": ..., "sync": ..., "steps": N,
+     "step_time_ms": median wall ms/step, "tokens_per_s": ...,
+     "loss_first": ..., "loss_last": ...}
+
+NOTE: this container has ONE cpu core — forced host devices serialize, so
+step_time_ms measures emulation overhead, not parallel speedup. The value of
+these rows is the *trajectory*: the same session config runs unchanged from
+1 to D devices (weighted sync, ragged balanced batches), and the recorded
+numbers become real scaling curves the moment the same benchmark runs on a
+real multi-chip mesh (the analytic Fig. 17 model projects that regime).
+"""
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.configs.registry import ARCHS
+from repro.data import synth
+from repro.embedding import EngineConfig
+from repro.train.session import SessionConfig, TrainSession
+
+AVG_LEN = 24
+
+
+def main(devices: int, steps: int, layout: str, sync: str) -> None:
+    session = TrainSession(SessionConfig(
+        model=ARCHS["grm-4g"].reduced(),
+        engine=EngineConfig(backend="local-dynamic", capacity=1 << 12,
+                            chunk_rows=512, accum_batches=1),
+        num_devices=devices,
+        layout=layout,
+        sync=sync if devices > 1 else "none",
+        target_tokens=AVG_LEN * 8,
+        pad_bucket=32,
+        seq_bucket=4,
+    ))
+    scfg = synth.SynthConfig(num_users=50, num_items=1000, avg_len=AVG_LEN,
+                             max_len=AVG_LEN * 4, seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        paths = synth.write_shards(scfg, d, num_shards=2 * devices,
+                                   samples_per_shard=64)
+        times, losses, tokens = [], [], 0
+        t_prev = [None]
+
+        def on_step(step, m):
+            now = time.perf_counter()
+            if t_prev[0] is not None:
+                times.append(now - t_prev[0])
+            t_prev[0] = now
+            losses.append(m["loss"])
+
+        t_prev[0] = time.perf_counter()
+        hist = session.run(paths, steps=steps, on_step=on_step)
+        tokens = sum(int(m["weight"]) for m in hist)
+    # drop the first (compile-dominated) step from the timing median
+    steady = sorted(times[1:]) or times
+    med = steady[len(steady) // 2]
+    print(json.dumps({
+        "devices": devices,
+        "layout": layout,
+        "sync": sync,
+        "steps": len(hist),
+        "step_time_ms": round(med * 1e3, 2),
+        "tokens_per_s": round(tokens / max(sum(times), 1e-9), 1),
+        "loss_first": round(float(losses[0]), 5),
+        "loss_last": round(float(losses[-1]), 5),
+    }))
+
+
+if __name__ == "__main__":
+    main(int(sys.argv[1]), int(sys.argv[2]), sys.argv[3], sys.argv[4])

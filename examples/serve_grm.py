@@ -3,46 +3,59 @@ the inference side of the paper's system ("billions of predictions for
 various services").
 
     PYTHONPATH=src python examples/serve_grm.py --requests 64
+    PYTHONPATH=src python examples/serve_grm.py \
+        --restore /path/to/ckpt --restore-step 20   # serve trained weights
 
 Request flow (mirrors training's Fig. 5, minus backward):
   requests (variable-length sequences) -> token-budget batching (the same
   Algorithm 1 machinery balances *serving* batches) -> EmbeddingEngine lookup
   (unknown IDs get fresh embeddings — the real-time insert path) -> HSTU +
   MMoE forward -> per-position CTR/CTCVR scores for the exposed items.
+
+Model state comes from a `TrainSession`: `--restore` loads the elastic
+checkpoint a training session wrote (dense params + engine shards +
+rowwise-Adam moments) through the same API that saved it; without it the
+session's fresh random init is served (layout/backend still config-driven).
 """
 import argparse
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.registry import ARCHS
-from repro.common.params import init_params
 from repro.data import synth
 from repro.data.sequence_balancing import DynamicSequenceBatcher, pad_batch
-from repro.embedding import EmbeddingEngine, EngineConfig
-from repro.models.grm import grm_apply, grm_param_defs
-from repro.train.grm_trainer import default_grm_features
+from repro.embedding import EngineConfig
+from repro.models.grm import grm_apply
+from repro.train.session import SessionConfig, TrainSession
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--avg-len", type=int, default=48)
+    ap.add_argument("--backend", default="local-dynamic",
+                    choices=["local-dynamic", "local-static"])
+    ap.add_argument("--restore", default=None,
+                    help="checkpoint dir written by a TrainSession")
+    ap.add_argument("--restore-step", type=int, default=0)
     args = ap.parse_args()
 
     cfg = ARCHS["grm-4g"].reduced()
-    engine = EmbeddingEngine(
-        default_grm_features(cfg.d_model),
-        EngineConfig(backend="local-dynamic", capacity=1 << 12, chunk_rows=512),
-        jax.random.PRNGKey(0),
-    )
-    params = init_params(jax.random.PRNGKey(1), grm_param_defs(cfg))
-
     scfg = synth.SynthConfig(num_users=100, num_items=2000,
                              avg_len=args.avg_len, max_len=args.avg_len * 4,
                              seed=4)
+    session = TrainSession(SessionConfig(
+        model=cfg,
+        engine=EngineConfig(backend=args.backend, capacity=1 << 12,
+                            chunk_rows=512,
+                            static_capacity=scfg.num_items),
+    ))
+    if args.restore:
+        session.restore(args.restore, args.restore_step)
+        print(f"restored step {args.restore_step} from {args.restore}")
+    engine, params = session.engine, session.dense_params
     requests = synth.generate_samples(scfg, args.requests, seed=11)
 
     # token-budget batching for serving: near-constant work per device batch

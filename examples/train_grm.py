@@ -1,4 +1,5 @@
-"""End-to-end GRM training driver — the paper's full workflow (Fig. 5).
+"""End-to-end GRM training driver — the paper's full workflow (Fig. 5),
+behind the unified `TrainSession` API.
 
     PYTHONPATH=src python examples/train_grm.py --steps 40          # smoke
     PYTHONPATH=src python examples/train_grm.py --steps 300 --full  # ~100M
@@ -7,29 +8,25 @@ Pipeline: synthetic long-tail Hive-style shards -> balanced batches
 (Algorithm 1) -> EmbeddingEngine (merged dynamic hash tables, real-time ID
 inserts, for the item AND contextual user features) -> HSTU + MMoE dense
 stack -> engine-side sparse grad accumulation + rowwise Adam / dense Adam ->
-periodic elastic checkpoints (engine shards + dense params).
+periodic elastic checkpoints (engine shards + dense params). The whole loop
+is one `SessionConfig`:
 
-Swap `--backend local-static` to train against the TorchRec-style fixed
-table the paper replaces — same trainer, one flag. `--packed` switches the
-batch materialization and the whole dense fwd/bwd to the jagged single-
-stream layout (zero padding FLOPs; see docs/packed_execution.md).
+  * `--backend local-static` trains against the TorchRec-style fixed table
+    the paper replaces — same session, one string.
+  * `--packed` switches batch materialization AND the dense fwd/bwd to the
+    jagged single-stream layout (zero padding FLOPs; docs/packed_execution.md).
+  * `--devices N --sync weighted` runs N-way data parallelism with §5.1
+    batch-size-weighted gradient sync (needs N visible jax devices, e.g.
+    XLA_FLAGS=--xla_force_host_platform_device_count=N).
 """
 import argparse
 import os
 import tempfile
 import time
 
-import jax
-import numpy as np
-
-from repro.ckpt import checkpoint as C
-from repro.configs.registry import ARCHS
 from repro.data import synth
-from repro.data.pipeline import make_input_pipeline
-from repro.embedding import EmbeddingEngine, EngineConfig
-from repro.optim.adam import Adam
-from repro.optim.rowwise_adam import RowwiseAdam
-from repro.train.grm_trainer import GRMTrainer, default_grm_features
+from repro.embedding import EngineConfig
+from repro.train.session import SessionConfig, TrainSession
 
 
 def main():
@@ -43,7 +40,13 @@ def main():
     ap.add_argument("--workdir", default=None)
     ap.add_argument("--packed", action="store_true",
                     help="jagged single-stream batches (no padding FLOPs)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="data-parallel devices (forced host mesh on CPU)")
+    ap.add_argument("--sync", default="weighted",
+                    choices=["weighted", "unweighted", "none"])
     args = ap.parse_args()
+
+    from repro.configs.registry import ARCHS
 
     cfg = ARCHS["grm-4g"] if args.full else ARCHS["grm-4g"].reduced()
     avg_len = 600 if args.full else 48
@@ -52,20 +55,6 @@ def main():
         num_items=200_000 if args.full else 1000,
         avg_len=avg_len, max_len=avg_len * 5, seed=0,
     )
-    engine = EmbeddingEngine(
-        default_grm_features(cfg.d_model),
-        EngineConfig(
-            backend=args.backend,
-            capacity=1 << (16 if args.full else 12),
-            chunk_rows=4096 if args.full else 512,
-            static_capacity=scfg.num_items,
-            accum_batches=2,
-        ),
-        jax.random.PRNGKey(0),
-        sparse_opt=RowwiseAdam(lr=2e-2),
-    )
-    trainer = GRMTrainer(cfg=cfg, engine=engine, dense_opt=Adam(lr=1e-3),
-                         packed=args.packed)
 
     workdir = args.workdir or tempfile.mkdtemp(prefix="grm_")
     data_dir = os.path.join(workdir, "shards")
@@ -75,38 +64,44 @@ def main():
                                samples_per_shard=256 if args.full else 64)
     print(f"wrote {n_shards} shards to {data_dir}")
 
-    it = make_input_pipeline(paths, 0, 1, balanced=True,
-                             target_tokens=avg_len * 16,
-                             pad_bucket=128 if args.full else 64,
-                             packed=args.packed)
+    session = TrainSession(SessionConfig(
+        model=cfg,
+        engine=EngineConfig(
+            backend=args.backend,
+            capacity=1 << (16 if args.full else 12),
+            chunk_rows=4096 if args.full else 512,
+            static_capacity=scfg.num_items,
+            accum_batches=2,
+        ),
+        num_devices=args.devices,
+        layout="packed" if args.packed else "padded",
+        sync=args.sync if args.devices > 1 else "none",
+        target_tokens=avg_len * 16,
+        pad_bucket=128 if args.full else 64,
+        dense_lr=1e-3,
+        sparse_lr=2e-2,
+        ckpt_every=args.ckpt_every,
+        ckpt_dir=ckpt_dir,
+    ))
+
     t0 = time.time()
     tok_seen = 0
 
-    def take(it, n):
-        for i, x in enumerate(it):
-            if i >= n:
-                return
-            yield x
-
-    batches = list(take(it, args.steps))
-    # §3 pipeline: the sparse dispatch of batch T+1 overlaps the dense
-    # compute of batch T (GRMTrainer.train_stream)
-    for step, (batch, m) in enumerate(
-        zip(batches, trainer.train_stream(batches))
-    ):
-        tok_seen += int(batch["tokens"])
-        if step % 5 == 0 or step == args.steps - 1:
-            entries = next(iter(engine.table_sizes().values()))
-            print(f"step {step:4d} loss {m['loss']:.4f} "
-                  f"batch {int(batch['batch_size'])} "
+    def on_step(step, m):
+        nonlocal tok_seen
+        tok_seen += int(m["weight"])
+        if (step - 1) % 5 == 0 or step == args.steps:
+            entries = next(iter(session.engine.table_sizes().values()))
+            print(f"step {step - 1:4d} loss {m['loss']:.4f} "
+                  f"tokens {int(m['weight'])} "
                   f"table_entries {entries} "
                   f"tok/s {tok_seen / (time.time() - t0):.0f}")
-        if args.ckpt_every and step and step % args.ckpt_every == 0:
-            C.save_dense(ckpt_dir, step,
-                         {"params": trainer.dense_params,
-                          "opt": trainer.dense_opt_state})
-            engine.save(ckpt_dir, step)
+        if args.ckpt_every and step % args.ckpt_every == 0:
             print(f"  checkpoint @ step {step} -> {ckpt_dir}")
+
+    # §3 pipeline: the session's train_stream overlaps the sparse dispatch of
+    # batch T+1 with the dense compute of batch T (run() drives it)
+    session.run(paths, steps=args.steps, on_step=on_step)
     print("done.")
 
 

@@ -37,7 +37,13 @@ def chunk_stream(paths: Sequence[str]) -> Iterator[List[dict]]:
 
 
 class Prefetcher:
-    """Background-thread prefetch of up to `depth` items (the copy stream)."""
+    """Background-thread prefetch of up to `depth` items (the copy stream).
+
+    Supports early shutdown: a consumer that stops mid-stream (error, step
+    budget, pipeline rebuild) calls `close()` — or uses the prefetcher as a
+    context manager — to release the producer thread, which would otherwise
+    stay blocked forever on a full queue holding host batch buffers.
+    """
 
     _DONE = object()
 
@@ -45,23 +51,57 @@ class Prefetcher:
                  transform: Optional[Callable] = None):
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._transform = transform
+        self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run, args=(it,), daemon=True)
         self._err: Optional[BaseException] = None
         self._thread.start()
 
+    def _put(self, x) -> bool:
+        """Blocking put that aborts when `close()` is called. Returns False
+        if the prefetcher was closed before the item could be enqueued."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(x, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
     def _run(self, it: Iterator) -> None:
         try:
             for x in it:
-                self._q.put(self._transform(x) if self._transform else x)
+                if not self._put(self._transform(x) if self._transform else x):
+                    return  # closed: drop the item, stop producing
         except BaseException as e:  # surface in consumer
             self._err = e
         finally:
-            self._q.put(self._DONE)
+            self._put(self._DONE)
+
+    def close(self) -> None:
+        """Stop the producer thread and drop any buffered items. Safe to call
+        more than once, and after normal exhaustion."""
+        self._stop.set()
+        # Drain so a producer blocked on a full queue can observe the stop
+        # flag and exit instead of holding host buffers forever.
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def __iter__(self):
         return self
 
     def __next__(self):
+        if self._stop.is_set():
+            raise StopIteration
         x = self._q.get()
         if x is self._DONE:
             if self._err is not None:
@@ -83,12 +123,14 @@ def make_input_pipeline(
     max_batch: Optional[int] = None,
     packed: bool = False,
     seq_bucket: int = 8,
-) -> Iterator[Dict[str, np.ndarray]]:
+) -> Prefetcher:
     """Per-device batch stream: shard read -> (dynamic | fixed) batching ->
     (padded | packed) materialization -> prefetch. `balanced=True` is the
     paper's system; False is the fixed-size baseline. `packed=True` emits the
     jagged single-stream layout of `pack_batch` (zero padding FLOPs) instead
-    of the (B, S_max) rectangle."""
+    of the (B, S_max) rectangle. The returned `Prefetcher` is an iterator
+    with `close()` (and context-manager) support — consumers that stop early
+    must close it to release the producer thread."""
     mine = shard_files(paths, device_index, num_devices)
     chunks = chunk_stream(mine)
     if balanced:
@@ -103,4 +145,4 @@ def make_input_pipeline(
     else:
         batches = (pad_batch(b, 0, bucket=pad_bucket)
                    for b in batcher.batches(chunks))
-    return iter(Prefetcher(batches, depth=prefetch))
+    return Prefetcher(batches, depth=prefetch)

@@ -223,6 +223,76 @@ def pack_batch(
     }
 
 
+def pad_stack(arrs: Sequence[np.ndarray], fill) -> np.ndarray:
+    """Pad same-rank arrays up to the per-dimension maximum with `fill`,
+    then stack along a new leading axis. The ragged-shape primitive shared
+    by `stack_device_batches` and the engine's per-shard feature routing
+    (`EmbeddingEngine.batch_features` over a batch sequence)."""
+    arrs = [np.asarray(a) for a in arrs]
+    shape = tuple(max(a.shape[i] for a in arrs) for i in range(arrs[0].ndim))
+    out = []
+    for a in arrs:
+        buf = np.full(shape, fill, a.dtype)
+        buf[tuple(slice(0, s) for s in a.shape)] = a
+        out.append(buf)
+    return np.stack(out)
+
+
+def stack_device_batches(
+    batches: Sequence[Dict[str, np.ndarray]]
+) -> Dict[str, np.ndarray]:
+    """Stack per-device batches into one batch with a leading device axis.
+
+    Dynamic sequence balancing makes every device's batch a different shape
+    (different B, S_max, T, Bp), so stacking pads each array up to the
+    per-dimension maximum first. Fill values keep padding inert through the
+    whole step:
+
+      ids (`*_ids`)   -1   (absent -> row handle -1 -> zero embedding)
+      mask            False
+      labels/positions 0
+      seq_ids         Bp_max — one past every real sequence slot of every
+                      device, so appended tokens keep the stream sorted and
+                      can never join a real attention segment
+      offsets         edge-extended with each device's own total (trailing
+                      slots empty, same convention as `pack_batch`)
+      scalars         stacked to (D,) — `tokens` per device feeds the
+                      batch-size-weighted gradient sync (§5.1)
+
+    Works for both materializations: padded `pad_batch` rectangles and
+    packed `pack_batch` streams.
+    """
+    assert batches, "need at least one device batch"
+    keys = batches[0].keys()
+    bp_max = 0
+    if "seq_ids" in keys:
+        bp_max = max(b["user_ids"].shape[0] for b in batches)
+    out: Dict[str, np.ndarray] = {}
+    for k in keys:
+        arrs = [np.asarray(b[k]) for b in batches]
+        if arrs[0].ndim == 0:
+            out[k] = np.stack(arrs)
+            continue
+        if k == "offsets":
+            # edge-extend each device's own total: trailing slots empty
+            L = max(a.shape[0] for a in arrs)
+            out[k] = np.stack([
+                np.concatenate([a, np.full(L - a.shape[0], a[-1], a.dtype)])
+                for a in arrs
+            ])
+            continue
+        if k == "seq_ids":
+            fill = bp_max
+        elif k.endswith("_ids"):
+            fill = -1
+        elif k == "mask":
+            fill = False
+        else:
+            fill = 0
+        out[k] = pad_stack(arrs, fill)
+    return out
+
+
 def imbalance_stats(per_device_tokens: Sequence[int]) -> Dict[str, float]:
     """Fig. 15 metric: spread of per-device token counts in one step."""
     t = np.asarray(per_device_tokens, np.float64)

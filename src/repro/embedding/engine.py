@@ -90,9 +90,23 @@ class EmbeddingEngine:
                 f"unknown feature {feature!r}; configured: {self.feature_names}"
             )
 
-    def batch_features(self, batch: Dict) -> Dict[str, jax.Array]:
+    def batch_features(self, batch) -> Dict[str, jax.Array]:
         """Pull every configured feature out of a data-pipeline batch
-        (feature `f` reads batch key `f` or `f_ids`)."""
+        (feature `f` reads batch key `f` or `f_ids`).
+
+        `batch` may also be a *sequence* of per-device/per-shard batches
+        (ragged shapes fine): each shard's features are routed, padded with
+        -1 (absent) up to the per-dimension maximum, and stacked with a
+        leading shard axis — one insert/lookup then serves every shard, and
+        -1 padding resolves to -1 handles / zero vectors as usual."""
+        if isinstance(batch, (list, tuple)):
+            from repro.data.sequence_balancing import pad_stack
+
+            per = [self.batch_features(b) for b in batch]
+            return {
+                f: jnp.asarray(pad_stack([p[f] for p in per], -1))
+                for f in per[0]
+            }
         out = {}
         for f in self.features:
             if f in batch:

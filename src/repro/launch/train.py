@@ -3,12 +3,20 @@
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
         --steps 20 --batch 4 --seq 64 --reduced
 
-Runs `make_train_step` on whatever devices exist (the single CPU here; the
-production mesh via the dry-run). Synthetic next-token data; reports loss,
-grad norm, and throughput. `--arch grm-4g` delegates to the full GRM driver
-(examples/train_grm.py) which owns the sparse side.
+    PYTHONPATH=src python -m repro.launch.train --arch grm-4g \
+        --steps 20 --reduced --packed --sync weighted
+
+Runs on whatever devices exist (the single CPU here; the production mesh via
+the dry-run). LM-style archs run `make_train_step` over synthetic next-token
+data; GRM archs route through the unified `TrainSession` (synthetic
+long-tail shards -> balanced batches -> EmbeddingEngine sparse phase ->
+data-parallel dense step with §5.1 weighted sync). `--devices N` requires N
+visible jax devices (e.g. a forced host mesh via
+XLA_FLAGS=--xla_force_host_platform_device_count=N).
 """
 import argparse
+import os
+import tempfile
 import time
 
 import jax
@@ -18,6 +26,45 @@ import numpy as np
 from repro.configs.registry import get_config
 from repro.optim.adam import Adam
 from repro.train import trainer as T
+
+
+def train_grm(cfg, args) -> None:
+    """GRM path: the full sparse+dense workflow behind one TrainSession."""
+    from repro.data import synth
+    from repro.embedding import EngineConfig
+    from repro.train.session import SessionConfig, TrainSession
+
+    avg_len = max(8, args.seq)
+    scfg = synth.SynthConfig(num_users=200, num_items=5000, avg_len=avg_len,
+                             max_len=avg_len * 5, seed=0)
+    session = TrainSession(SessionConfig(
+        model=cfg,
+        engine=EngineConfig(backend="local-dynamic", capacity=1 << 12,
+                            chunk_rows=512, accum_batches=1),
+        num_devices=args.devices,
+        layout="packed" if args.packed else "padded",
+        sync=args.sync,
+        target_tokens=avg_len * max(4, args.batch),
+        pad_bucket=64,
+        dense_lr=args.lr,
+    ))
+    with tempfile.TemporaryDirectory(prefix="grm_launch_") as d:
+        paths = synth.write_shards(scfg, os.path.join(d, "shards"),
+                                   num_shards=max(4, 2 * args.devices),
+                                   samples_per_shard=64)
+        t0 = time.time()
+        tok = 0
+
+        def on_step(step, m):
+            nonlocal tok
+            tok += int(m["weight"])
+            if (step - 1) % 5 == 0 or step == args.steps:
+                print(f"step {step - 1:4d} loss {m['loss']:.4f} "
+                      f"gnorm {m['grad_norm']:.3f} "
+                      f"tok/s {tok / (time.time() - t0):.0f}")
+
+        session.run(paths, steps=args.steps, on_step=on_step)
+    print("done.")
 
 
 def main():
@@ -30,14 +77,20 @@ def main():
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--reduced", action="store_true",
                     help="reduced dims (CPU-runnable)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="data-parallel devices (GRM session path)")
+    ap.add_argument("--packed", action="store_true",
+                    help="GRM: jagged single-stream batches (no padding FLOPs)")
+    ap.add_argument("--sync", default="weighted",
+                    choices=["weighted", "unweighted", "none"],
+                    help="GRM: §5.1 gradient synchronization mode")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     if cfg.arch_type == "grm":
-        raise SystemExit("use examples/train_grm.py for the GRM "
-                         "(it owns the sparse tables)")
+        return train_grm(cfg, args)
 
     opt = Adam(lr=args.lr)
     params, ostate = T.init_all(cfg, jax.random.PRNGKey(0), opt)
@@ -55,7 +108,6 @@ def main():
                                            jnp.int32)
         elif cfg.frontend == "vision_patches":
             Ptok = min(cfg.frontend_tokens, S // 2)
-            import dataclasses
             batch["patches"] = jnp.asarray(rng.normal(0, 0.02, (B, Ptok, cfg.d_model)),
                                            jnp.float32)
             batch["tokens"] = jnp.asarray(

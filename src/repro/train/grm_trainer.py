@@ -1,41 +1,35 @@
-"""End-to-end GRM trainer: the paper's full workflow (Fig. 5).
+"""`GRMTrainer`: thin compatibility shim over `repro.train.session`.
 
-Composes every subsystem:
+Historically this module owned the whole single-device GRM loop (data
+pipeline -> EmbeddingEngine sparse phase -> jitted dense step -> sparse +
+dense updates). That loop now lives in `TrainSession`
+(src/repro/train/session.py), which runs the same workflow on ANY device
+count with §5.1 batch-size-weighted gradient sync and both batch layouts.
 
-  data pipeline (balanced batches, §5.1)
-    -> EmbeddingEngine (§4): dynamic hash tables w/ automatic merging, the
-       host control plane inserting new IDs in real time — for EVERY
-       configured feature (contextual `user` sequence + `item` actions)
-    -> jitted device step: gather rows -> HSTU stack -> MMoE -> CTR/CTCVR loss
-       -> grads for the dense model AND for the *touched embedding rows only*
-    -> engine.apply_grads: sparse grad accumulation (sorted segment-sum,
-       §5.2) + rowwise Adam on touched rows, moments migrated across growth
-    -> dense Adam
+`GRMTrainer` keeps the old surface — `train_step(batch)`,
+`train_stream(batches)`, `dense_params`, `dense_opt_state`, `engine`,
+`packed` — by delegating to a single-device session (`sync='none'`), so
+existing callers and tests run unmodified. New code should build a
+`TrainSession` directly:
 
-The trainer is dense-model + loop logic only: all sparse storage, update and
-eviction policy lives behind the `EmbeddingEngine` facade, so switching the
-backend (local/sharded, dynamic/static) is an `EngineConfig` change, not a
-trainer change.
-
-The jitted step takes the gathered row indices as data, so the embedding
-gradient is computed w.r.t. the gathered vectors — O(batch), never
-O(table) — exactly the paper's "selectively updating only activated parts".
+    from repro.train.session import SessionConfig, TrainSession
+    session = TrainSession(SessionConfig(model=cfg, layout="packed"))
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Dict, Iterator, Tuple
+from typing import Dict, Iterator
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.embedding import EmbeddingEngine, FeatureConfig
-from repro.models.grm import grm_apply, grm_apply_packed, grm_loss, grm_param_defs
-from repro.optim.adam import Adam, global_norm
-from repro.common.params import init_params
+from repro.embedding import EmbeddingEngine
+from repro.optim.adam import Adam
+from repro.train.session import (  # noqa: F401  (re-export)
+    SessionConfig,
+    TrainSession,
+    default_grm_features,
+)
 
 
 @dataclasses.dataclass
@@ -46,134 +40,42 @@ class GRMTrainer:
     packed: bool = False  # jagged single-stream batches (pack_batch layout)
 
     def __post_init__(self):
-        key = jax.random.PRNGKey(0)
-        self.dense_params = init_params(key, grm_param_defs(self.cfg))
-        self.dense_opt_state = self.dense_opt.init(self.dense_params)
-        self._step_fn = jax.jit(functools.partial(_grm_step, cfg=self.cfg))
-
-    # ------------------------------------------------------------------
-    # Phases (paper §3 workflow: dispatch -> compute -> update)
-    # ------------------------------------------------------------------
-
-    def _sparse_phase(self, batch: Dict[str, np.ndarray]):
-        """Dispatch-stream work: insert unseen IDs of every configured
-        feature (dynamic table, real-time), resolve row handles. Handles are
-        stable under subsequent inserts, so this may safely run ahead of the
-        compute of the previous batch (§3 'Pipeline')."""
-        feats = self.engine.batch_features(batch)
-        return self.engine.insert(feats)
-
-    def _dispatch_dense(self, batch, rows):
-        """Compute-stream work: enqueue the jitted fwd+bwd (non-blocking —
-        jax dispatch is async; the host returns immediately)."""
-        embs = {f: self.engine.emb_of(f) for f in rows}
-        if self.packed:
-            return self._step_fn(
-                self.dense_params, embs, rows,
-                jnp.asarray(batch["labels"]), jnp.asarray(batch["mask"]),
-                jnp.asarray(batch["seq_ids"]), jnp.asarray(batch["positions"]),
-            )
-        return self._step_fn(
-            self.dense_params, embs, rows,
-            jnp.asarray(batch["labels"]), jnp.asarray(batch["mask"]),
+        self.session = TrainSession(
+            SessionConfig(
+                model=self.cfg,
+                layout="packed" if self.packed else "padded",
+                sync="none",
+                num_devices=1,
+            ),
+            engine=self.engine,
+            dense_opt=self.dense_opt,
         )
 
-    def _finish(self, rows, outputs) -> Dict[str, float]:
-        """Update-stream work: engine-side sparse path + dense optimizer."""
-        loss, metrics, dense_grads, emb_grads = outputs
-        self.engine.apply_grads(rows, emb_grads)
-        self.dense_params, self.dense_opt_state = self.dense_opt.update(
-            dense_grads, self.dense_opt_state, self.dense_params
-        )
-        return {k: float(v) for k, v in metrics.items()} | {"loss": float(loss)}
+    # -- state passthrough (the session owns it) -----------------------
+
+    @property
+    def dense_params(self):
+        return self.session.dense_params
+
+    @dense_params.setter
+    def dense_params(self, v):
+        self.session.dense_params = v
+
+    @property
+    def dense_opt_state(self):
+        return self.session.dense_opt_state
+
+    @dense_opt_state.setter
+    def dense_opt_state(self, v):
+        self.session.dense_opt_state = v
+
+    # -- the old loop surface ------------------------------------------
 
     def train_step(self, batch: Dict[str, np.ndarray]) -> Dict[str, float]:
-        """One host-driven step over a padded balanced batch (unpipelined)."""
-        rows = self._sparse_phase(batch)
-        return self._finish(rows, self._dispatch_dense(batch, rows))
+        """One host-driven step over a single balanced batch (unpipelined)."""
+        return self.session.train_step(batch)
 
     def train_stream(self, batches) -> "Iterator[Dict[str, float]]":
-        """Pipelined training (§3): while the device runs the dense fwd+bwd
-        of batch T (async jax dispatch), the host runs the sparse dispatch
-        phase of batch T+1 — the copy/dispatch/compute overlap of the
-        paper's three CUDA streams, in jax terms."""
-        it = iter(batches)
-        try:
-            cur = next(it)
-        except StopIteration:
-            return
-        cur_rows = self._sparse_phase(cur)
-        for nxt in it:
-            outputs = self._dispatch_dense(cur, cur_rows)  # async on device
-            nxt_rows = self._sparse_phase(nxt)  # overlapped host work
-            yield self._finish(cur_rows, outputs)
-            cur, cur_rows = nxt, nxt_rows
-        yield self._finish(cur_rows, self._dispatch_dense(cur, cur_rows))
-
-
-def _grm_step(dense_params, embs, rows, labels, mask, seq_ids=None,
-              positions=None, *, cfg: ModelConfig):
-    """Jitted: gather every feature -> dense forward -> loss -> (dense grads,
-    per-slot embedding grads for every feature).
-
-    Input composition (paper §2, Fig. 3): `item` is the positional action
-    sequence; every other feature (the contextual `user` sub-sequence) is
-    mean-pooled over its valid slots and broadcast-added to all positions.
-
-    With `seq_ids`/`positions` supplied, the batch is one (T,) jagged token
-    stream (pack_batch layout) instead of a (B, S_max) rectangle, so the
-    forward/backward spends zero FLOPs on padding. The embedding
-    gather/scatter reuses the exact same EmbeddingEngine row handles — only
-    the shapes change: `item` rows are (T,), contextual features stay
-    (Bp, ctx) and broadcast to tokens through a seq_ids gather instead of
-    `[:, None, :]`. The two layouts match to fp32 tolerance.
-    """
-    packed = seq_ids is not None
-
-    gathered = {}
-    for f, emb_table in embs.items():
-        r = rows[f]
-        valid = r >= 0
-        gathered[f] = jnp.where(
-            valid[..., None], emb_table[jnp.where(valid, r, 0)], 0.0
-        ).astype(jnp.float32)
-
-    def loss_fn(dp, g):
-        x = g["item"]  # (B, S, d) padded | (T, d) packed
-        for f, gv in g.items():
-            if f == "item":
-                continue
-            fvalid = (rows[f] >= 0).astype(jnp.float32)[..., None]
-            ctx = jnp.sum(gv * fvalid, axis=-2) / jnp.maximum(
-                jnp.sum(fvalid, axis=-2), 1.0
-            )  # per-sequence contextual pooling
-            if packed:
-                seg = jnp.minimum(seq_ids, ctx.shape[0] - 1)  # pad clamp
-                x = x + ctx[seg]
-            else:
-                x = x + ctx[:, None, :]
-        if packed:
-            logits = grm_apply_packed(dp, x, seq_ids, positions, mask, cfg)
-        else:
-            logits = grm_apply(dp, x, mask, cfg)
-        loss_sum, m = grm_loss(logits, labels, mask)
-        return loss_sum / jnp.maximum(m["weight"], 1.0), m
-
-    (loss, m), (dgrads, egrads) = jax.value_and_grad(
-        loss_fn, argnums=(0, 1), has_aux=True
-    )(dense_params, gathered)
-    metrics = {
-        "loss_sum": m["loss_sum"],
-        "weight": m["weight"],
-        "grad_norm": global_norm(dgrads),
-    }
-    return loss, metrics, dgrads, egrads
-
-
-def default_grm_features(embed_dim: int) -> Tuple[FeatureConfig, ...]:
-    """The paper's three input sub-sequences (§2): contextual (user),
-    historical + exposed (items share one logical table)."""
-    return (
-        FeatureConfig("item", embed_dim),  # historical + exposed actions
-        FeatureConfig("user", embed_dim, pooling="none"),  # contextual
-    )
+        """Pipelined training (§3): sparse dispatch of batch T+1 overlaps the
+        dense compute of batch T (see `TrainSession.train_stream`)."""
+        return self.session.train_stream(batches)

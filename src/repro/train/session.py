@@ -1,0 +1,482 @@
+"""`TrainSession`: the unified entry point for GRM training.
+
+One config-driven API composes every subsystem of the paper's workflow
+(Fig. 5) for ANY device count, in EITHER batch layout:
+
+    session = TrainSession(SessionConfig(
+        model=ARCHS["grm-4g"].reduced(),
+        engine=EngineConfig(backend="local-dynamic", capacity=1 << 12),
+        num_devices=4,          # data-parallel mesh (1 = single device)
+        layout="packed",        # padded | packed (jagged single stream)
+        sync="weighted",        # §5.1 batch-size-weighted gradient sync
+        target_tokens=600 * 96, # Algorithm 1 token budget per device
+        ckpt_every=200, evict_every=0,
+    ))
+    for metrics in session.run(shard_paths, steps=1000):
+        ...
+
+What the session owns, per step (the paper's three-stream pipeline, §3):
+
+  * per-device balanced input pipelines (`make_input_pipeline`, one shard
+    list per device) — the data/copy stream;
+  * the engine's sparse phase: real-time ID admission for every configured
+    feature across ALL device batches at once (stacked per-shard routing),
+    resolving the O(batch) row handles the jitted step gathers with;
+  * ONE jitted step over the device-stacked batch: the GRM fwd/bwd runs
+    data-parallel under the mesh (batch sharded over the data axis, dense
+    params + embedding tables replicated), and the loss is formed as
+    global-sum / global-weight — the pjit-native realization of §5.1
+    batch-size-weighted gradient sync (see train/weighted_sync.py for the
+    algebra and the explicit shard_map form it is tested against);
+  * the update stream: engine-side sparse accumulation + rowwise Adam on
+    the touched rows of every device, dense Adam, and the checkpoint /
+    eviction cadence.
+
+`train_stream` overlaps the host sparse phase of batch T+1 with the async
+device compute of batch T — the dispatch/compute/update overlap previously
+hand-coded in `GRMTrainer.train_stream` (which is now a shim over this
+class). Multi-host (`jax.distributed`) backends plug in at the same seam:
+a process-local mesh slice replaces the forced host mesh, everything above
+this module is unchanged.
+
+Ragged per-device batches: dynamic sequence balancing gives every device a
+different batch shape, so `stack_device_batches` pads to the per-dim max
+with inert fill values (mask=False rows/tokens, id -1 -> zero embedding)
+and the weighting makes the *effective* sizes exact — padding never biases
+the update.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.ckpt import checkpoint as C
+from repro.common import compat
+from repro.common.params import init_params
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import make_input_pipeline
+from repro.data.sequence_balancing import stack_device_batches
+from repro.embedding import EmbeddingEngine, EngineConfig, FeatureConfig
+from repro.models.grm import (
+    grm_apply,
+    grm_apply_packed,
+    grm_loss,
+    grm_param_defs,
+)
+from repro.optim.adam import Adam, global_norm
+from repro.optim.rowwise_adam import RowwiseAdam
+
+LAYOUTS = ("padded", "packed")
+SYNCS = ("weighted", "unweighted", "none")
+
+Batch = Dict[str, np.ndarray]
+
+
+@dataclasses.dataclass
+class SessionConfig:
+    """Everything a training run needs, in one declarative record.
+
+    Only the fields relevant to the chosen layout/backend are read (mirrors
+    `EngineConfig`). `sync`:
+
+      weighted    §5.1: gradient = Σ_dev grad_sum / Σ_dev weight — unbiased
+                  under dynamic per-device batch sizes (the paper's system).
+      unweighted  the biased baseline: mean over devices of per-device mean
+                  gradients (what plain All-Reduce-mean DDP computes).
+      none        no cross-device reduction semantics; single-device only
+                  (on one device it coincides with `weighted`).
+    """
+
+    model: ModelConfig
+    engine: EngineConfig = dataclasses.field(default_factory=EngineConfig)
+    features: Optional[Tuple[FeatureConfig, ...]] = None  # default: item+user
+
+    # mesh / data parallelism (dense stack; the sparse side is engine-owned)
+    num_devices: int = 1
+    data_axis: str = "data"
+    mesh: Optional[Mesh] = None  # built over num_devices when None
+
+    # batch layout and gradient synchronization
+    layout: str = "padded"  # padded | packed (jagged single stream)
+    sync: str = "weighted"  # weighted | unweighted | none
+
+    # input pipeline (per device; Algorithm 1 when balanced)
+    balanced: bool = True
+    target_tokens: int = 0  # token budget N (balanced=True)
+    batch_size: int = 0  # sequences per batch (balanced=False)
+    pad_bucket: int = 128
+    seq_bucket: int = 8
+    prefetch: int = 2
+    max_batch: Optional[int] = None
+
+    # optimizers (overridable with instances via TrainSession(...))
+    dense_lr: float = 1e-3
+    sparse_lr: float = 2e-2
+
+    # cadences (run()): 0 disables
+    ckpt_every: int = 0
+    ckpt_dir: Optional[str] = None
+    evict_every: int = 0
+    evict_n: int = 0
+    evict_policy: str = "lfu"
+
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.layout not in LAYOUTS:
+            raise ValueError(
+                f"unknown layout {self.layout!r}; expected one of {LAYOUTS}"
+            )
+        if self.sync not in SYNCS:
+            raise ValueError(
+                f"unknown sync {self.sync!r}; expected one of {SYNCS}"
+            )
+        if self.mesh is not None:
+            if self.data_axis not in self.mesh.axis_names:
+                raise ValueError(
+                    f"mesh has no axis {self.data_axis!r}: {self.mesh.axis_names}"
+                )
+            self.num_devices = int(np.prod(self.mesh.devices.shape))
+        if self.num_devices < 1:
+            raise ValueError("num_devices must be >= 1")
+        if self.sync == "none" and self.num_devices > 1:
+            raise ValueError(
+                "sync='none' has no cross-device semantics; use 'weighted' "
+                "(or 'unweighted') on a multi-device session"
+            )
+        if self.ckpt_every and not self.ckpt_dir:
+            raise ValueError("ckpt_every > 0 requires ckpt_dir")
+
+
+class TrainSession:
+    """Owns the whole training loop for one `SessionConfig`.
+
+    Pass pre-built `engine` / `dense_opt` / `sparse_opt` instances to share
+    state or override hyperparameters beyond the config scalars.
+    """
+
+    def __init__(
+        self,
+        cfg: SessionConfig,
+        *,
+        engine: Optional[EmbeddingEngine] = None,
+        dense_opt: Optional[Adam] = None,
+        sparse_opt: Optional[RowwiseAdam] = None,
+    ):
+        self.cfg = cfg
+        self.mesh = cfg.mesh
+        if self.mesh is None and cfg.num_devices > 1:
+            self.mesh = compat.make_mesh((cfg.num_devices,), (cfg.data_axis,))
+        feats = cfg.features or default_grm_features(cfg.model.d_model)
+        self.engine = engine or EmbeddingEngine(
+            feats,
+            cfg.engine,
+            jax.random.PRNGKey(cfg.seed),
+            sparse_opt=sparse_opt or RowwiseAdam(lr=cfg.sparse_lr),
+        )
+        self.dense_opt = dense_opt or Adam(lr=cfg.dense_lr)
+        key = jax.random.PRNGKey(cfg.seed)
+        self.dense_params = init_params(key, grm_param_defs(cfg.model))
+        self.dense_opt_state = self.dense_opt.init(self.dense_params)
+        self._step_fn = jax.jit(
+            functools.partial(_session_step, cfg=cfg.model, sync=cfg.sync)
+        )
+        self.step_count = 0
+
+    @property
+    def packed(self) -> bool:
+        return self.cfg.layout == "packed"
+
+    # ------------------------------------------------------------------
+    # Data plane: one balanced pipeline per device (paper §3 'Data I/O')
+    # ------------------------------------------------------------------
+
+    def make_pipelines(self, paths: Sequence[str]) -> List:
+        """One `make_input_pipeline` per mesh device (static shard-to-device
+        assignment). Each returned iterator has `close()`."""
+        c = self.cfg
+        return [
+            make_input_pipeline(
+                paths, d, c.num_devices,
+                balanced=c.balanced, target_tokens=c.target_tokens,
+                batch_size=c.batch_size, pad_bucket=c.pad_bucket,
+                prefetch=c.prefetch, max_batch=c.max_batch,
+                packed=self.packed, seq_bucket=c.seq_bucket,
+            )
+            for d in range(c.num_devices)
+        ]
+
+    def device_batches(self, paths: Sequence[str]) -> Iterator[List[Batch]]:
+        """Lock-step per-device batch lists; stops at the shortest pipeline
+        (synchronous data parallelism) and closes all pipelines on exit —
+        including early consumer exit (generator close / break)."""
+        pipes = self.make_pipelines(paths)
+        try:
+            yield from zip(*pipes)
+        finally:
+            for p in pipes:
+                if hasattr(p, "close"):
+                    p.close()
+
+    # ------------------------------------------------------------------
+    # Phases (paper §3 workflow: dispatch -> compute -> update)
+    # ------------------------------------------------------------------
+
+    def _stack(self, batches) -> Batch:
+        if isinstance(batches, dict):
+            batches = [batches]
+        batches = list(batches)
+        if len(batches) != self.cfg.num_devices:
+            raise ValueError(
+                f"got {len(batches)} device batches for a "
+                f"{self.cfg.num_devices}-device session"
+            )
+        return stack_device_batches(batches)
+
+    def _sparse_phase(self, stacked: Batch) -> Dict[str, jax.Array]:
+        """Dispatch-stream work: admit unseen IDs of every configured feature
+        across ALL device batches at once (the engine routes the stacked
+        (D, ...) id arrays per merged table), resolve row handles. Handles
+        are stable under subsequent inserts, so this may safely run ahead of
+        the previous batch's compute (§3 'Pipeline')."""
+        feats = self.engine.batch_features(stacked)
+        return self.engine.insert(feats)
+
+    def _put_batch(self, x: np.ndarray) -> jax.Array:
+        """Device placement: shard the leading device axis over the mesh's
+        data axis (GSPMD then runs the step data-parallel); single-device
+        sessions skip the sharding."""
+        if self.mesh is None:
+            return jnp.asarray(x)
+        spec = P(self.cfg.data_axis, *([None] * (np.ndim(x) - 1)))
+        return jax.device_put(jnp.asarray(x), NamedSharding(self.mesh, spec))
+
+    def _put_replicated(self, tree):
+        if self.mesh is None:
+            return tree
+        return jax.device_put(tree, NamedSharding(self.mesh, P()))
+
+    def _dispatch(self, stacked: Batch, rows: Dict[str, jax.Array]):
+        """Compute-stream work: enqueue the jitted fwd+bwd (non-blocking —
+        jax dispatch is async; the host returns immediately)."""
+        embs = {f: self.engine.emb_of(f) for f in rows}
+        embs = self._put_replicated(embs)
+        params = self._put_replicated(self.dense_params)
+        rows_dev = {f: self._put_batch(np.asarray(r)) for f, r in rows.items()}
+        args = [
+            params, embs, rows_dev,
+            self._put_batch(stacked["labels"]),
+            self._put_batch(stacked["mask"]),
+        ]
+        if self.packed:
+            args += [
+                self._put_batch(stacked["seq_ids"]),
+                self._put_batch(stacked["positions"]),
+            ]
+        return self._step_fn(*args)
+
+    def _finish(self, rows, outputs) -> Dict[str, float]:
+        """Update-stream work: engine-side sparse path + dense optimizer."""
+        loss, metrics, dense_grads, emb_grads = outputs
+        self.engine.apply_grads(rows, emb_grads)
+        self.dense_params, self.dense_opt_state = self.dense_opt.update(
+            dense_grads, self.dense_opt_state, self.dense_params
+        )
+        self.step_count += 1
+        return {k: float(v) for k, v in metrics.items()} | {"loss": float(loss)}
+
+    def train_step(self, batches) -> Dict[str, float]:
+        """One unpipelined step. `batches` is one batch dict (single device)
+        or a sequence of per-device batch dicts (ragged shapes fine)."""
+        stacked = self._stack(batches)
+        rows = self._sparse_phase(stacked)
+        return self._finish(rows, self._dispatch(stacked, rows))
+
+    def train_stream(self, batch_stream: Iterable) -> Iterator[Dict[str, float]]:
+        """Pipelined training (§3): while the devices run the dense fwd+bwd
+        of batch T (async jax dispatch), the host runs the sparse dispatch
+        phase of batch T+1 — the copy/dispatch/compute overlap of the
+        paper's three CUDA streams, in jax terms."""
+        it = iter(batch_stream)
+        try:
+            cur = self._stack(next(it))
+        except StopIteration:
+            return
+        cur_rows = self._sparse_phase(cur)
+        for nxt in it:
+            outputs = self._dispatch(cur, cur_rows)  # async on device
+            nxt = self._stack(nxt)
+            nxt_rows = self._sparse_phase(nxt)  # overlapped host work
+            yield self._finish(cur_rows, outputs)
+            cur, cur_rows = nxt, nxt_rows
+        yield self._finish(cur_rows, self._dispatch(cur, cur_rows))
+
+    # ------------------------------------------------------------------
+    # The loop
+    # ------------------------------------------------------------------
+
+    def run(
+        self,
+        paths: Sequence[str],
+        steps: Optional[int] = None,
+        on_step=None,
+    ) -> List[Dict[str, float]]:
+        """The full loop: pipelines -> (pipelined) steps -> cadenced eviction
+        and elastic checkpoints. Returns the per-step metrics.
+
+        Eviction compacts table rows, which invalidates the row handles the
+        pipelined stream pre-resolved for the NEXT batch — so with an
+        eviction cadence the loop runs unpipelined steps instead.
+        """
+        c = self.cfg
+        history: List[Dict[str, float]] = []
+
+        def bounded(it):
+            for i, b in enumerate(it):
+                if steps is not None and i >= steps:
+                    return
+                yield b
+
+        source = self.device_batches(paths)
+        stream = bounded(source)
+        stepper = (
+            map(self.train_step, stream) if c.evict_every
+            else self.train_stream(stream)
+        )
+        try:
+            for m in stepper:
+                history.append(m)
+                if on_step is not None:
+                    on_step(self.step_count, m)
+                if c.evict_every and self.step_count % c.evict_every == 0:
+                    self.engine.evict(c.evict_n, c.evict_policy,
+                                      step=self.step_count)
+                if c.ckpt_every and self.step_count % c.ckpt_every == 0:
+                    self.save(step=self.step_count)
+        finally:
+            # Deterministically release the per-device prefetch threads even
+            # when the step budget stops the loop mid-stream.
+            source.close()
+        return history
+
+    # ------------------------------------------------------------------
+    # Elastic checkpoints (§5.2): dense trainer state + engine shards
+    # ------------------------------------------------------------------
+
+    def save(self, ckpt_dir: Optional[str] = None, step: int = 0) -> str:
+        d = ckpt_dir or self.cfg.ckpt_dir
+        assert d, "no ckpt_dir configured or passed"
+        C.save_dense(d, step, {"params": self.dense_params,
+                               "opt": self.dense_opt_state})
+        self.engine.save(d, step)
+        return d
+
+    def restore(self, ckpt_dir: str, step: int) -> None:
+        proto = jax.eval_shape(
+            lambda: {"params": self.dense_params, "opt": self.dense_opt_state}
+        )
+        loaded = C.load_dense(ckpt_dir, step, proto)
+        self.dense_params = loaded["params"]
+        self.dense_opt_state = loaded["opt"]
+        self.engine.load(ckpt_dir, step)
+        self.step_count = step
+
+
+# ---------------------------------------------------------------------------
+# The jitted step
+# ---------------------------------------------------------------------------
+
+
+def _session_step(dense_params, embs, rows, labels, mask, seq_ids=None,
+                  positions=None, *, cfg: ModelConfig, sync: str):
+    """Jitted: gather every feature -> per-device dense forward -> synced
+    loss -> (dense grads, per-slot embedding grads for every feature).
+
+    Every batch array carries a leading device axis D; the per-device body
+    (vmapped) is exactly the single-device GRM step of grm_trainer history:
+    `item` is the positional action sequence, every other feature is the
+    contextual sub-sequence, mean-pooled and broadcast to positions. With
+    `seq_ids`/`positions` the per-device batch is one (T,) jagged stream
+    (pack_batch layout) instead of a (B, S) rectangle.
+
+    Sync (§5.1): per-device *summed* loss and weight reduce globally —
+    `weighted` (and single-device `none`) form Σ loss / Σ weight, whose
+    gradient is algebraically the batch-size-weighted All-Reduce of the
+    paper; `unweighted` forms mean_d(loss_d / weight_d), the biased plain
+    mean baseline. Under a mesh with the batch sharded over the data axis,
+    GSPMD lowers the global sums to the actual cross-device reductions.
+
+    The embedding gradient is computed w.r.t. the gathered vectors —
+    O(batch), never O(table) — and returned with the device axis intact so
+    the engine's sparse path sums duplicates across devices.
+    """
+    packed = seq_ids is not None
+
+    gathered = {}
+    for f, emb_table in embs.items():
+        r = rows[f]
+        valid = r >= 0
+        gathered[f] = jnp.where(
+            valid[..., None], emb_table[jnp.where(valid, r, 0)], 0.0
+        ).astype(jnp.float32)
+
+    def loss_fn(dp, g):
+        def device_loss_sums(g_d, rows_d, labels_d, mask_d, stream_d):
+            """Local summed loss + weight for ONE device's batch slice."""
+            x = g_d["item"]  # (B, S, d) padded | (T, d) packed
+            for f, gv in g_d.items():
+                if f == "item":
+                    continue
+                fvalid = (rows_d[f] >= 0).astype(jnp.float32)[..., None]
+                ctx = jnp.sum(gv * fvalid, axis=-2) / jnp.maximum(
+                    jnp.sum(fvalid, axis=-2), 1.0
+                )  # per-sequence contextual pooling
+                if packed:
+                    seg = jnp.minimum(stream_d[0], ctx.shape[0] - 1)  # pad clamp
+                    x = x + ctx[seg]
+                else:
+                    x = x + ctx[:, None, :]
+            if packed:
+                logits = grm_apply_packed(dp, x, stream_d[0], stream_d[1],
+                                          mask_d, cfg)
+            else:
+                logits = grm_apply(dp, x, mask_d, cfg)
+            loss_sum, m = grm_loss(logits, labels_d, mask_d)
+            return loss_sum, m["weight"]
+
+        stream = (seq_ids, positions) if packed else ()
+        sums, weights = jax.vmap(device_loss_sums)(
+            g, rows, labels, mask, stream
+        )
+        total_sum = jnp.sum(sums)
+        total_w = jnp.sum(weights)
+        if sync == "unweighted":
+            loss = jnp.mean(sums / jnp.maximum(weights, 1.0))
+        else:  # weighted | none (identical on one device)
+            loss = total_sum / jnp.maximum(total_w, 1.0)
+        return loss, {"loss_sum": total_sum, "weight": total_w}
+
+    (loss, m), (dgrads, egrads) = jax.value_and_grad(
+        loss_fn, argnums=(0, 1), has_aux=True
+    )(dense_params, gathered)
+    metrics = {
+        "loss_sum": m["loss_sum"],
+        "weight": m["weight"],
+        "grad_norm": global_norm(dgrads),
+    }
+    return loss, metrics, dgrads, egrads
+
+
+def default_grm_features(embed_dim: int) -> Tuple[FeatureConfig, ...]:
+    """The paper's three input sub-sequences (§2): contextual (user),
+    historical + exposed (items share one logical table)."""
+    return (
+        FeatureConfig("item", embed_dim),  # historical + exposed actions
+        FeatureConfig("user", embed_dim, pooling="none"),  # contextual
+    )

@@ -243,3 +243,30 @@ def test_prefetcher_order_and_error():
     assert next(it) == 1
     with pytest.raises(ValueError):
         list(it)
+
+
+def test_prefetcher_close_unblocks_producer():
+    """An early-exiting consumer must not leave the daemon thread blocked
+    forever on a full queue holding host buffers."""
+    it = Prefetcher(iter(range(1000)), depth=1)
+    assert next(it) == 0
+    assert it._thread.is_alive()  # producer blocked on the full queue
+    it.close()
+    assert not it._thread.is_alive()
+    with pytest.raises(StopIteration):
+        next(it)
+    it.close()  # idempotent
+
+
+def test_prefetcher_context_manager():
+    with Prefetcher(iter(range(1000)), depth=1) as it:
+        assert next(it) == 0
+        thread = it._thread
+    assert not thread.is_alive()
+
+
+def test_prefetcher_close_after_exhaustion():
+    it = Prefetcher(iter(range(3)), depth=2)
+    assert list(it) == [0, 1, 2]
+    it.close()  # no-op after normal completion
+    assert not it._thread.is_alive()

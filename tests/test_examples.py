@@ -53,3 +53,18 @@ def test_launch_train_smoke():
     )
     assert proc.returncode == 0, proc.stderr
     assert "done." in proc.stdout
+
+
+def test_launch_train_grm_smoke():
+    """GRM archs route through the unified TrainSession (no more
+    SystemExit special case), including the --packed layout flag."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "grm-4g",
+         "--reduced", "--steps", "3", "--seq", "24", "--packed",
+         "--sync", "weighted"],
+        capture_output=True, text=True, timeout=420, env=env, cwd=ROOT,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "done." in proc.stdout

@@ -1,0 +1,245 @@
+"""TrainSession tests: the unified training entry point.
+
+In-process tests cover the single-device API surface (config validation,
+device-batch stacking, layout parity with the GRMTrainer shim, run()
+cadences, checkpoint round-trip, pipeline shutdown). The multi-device
+acceptance matrix — 4-device weighted sync vs the single-device oracle in
+both layouts, weighted ≠ unweighted on imbalanced batches — runs in a
+subprocess that forces 4 host devices before importing jax
+(tests/dist_scripts/check_session_multidev.py; see conftest note).
+"""
+import os
+import subprocess
+import sys
+import tempfile
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.data import synth
+from repro.data.sequence_balancing import (
+    pack_batch,
+    pad_batch,
+    stack_device_batches,
+)
+from repro.embedding import EmbeddingEngine, EngineConfig
+from repro.train.session import (
+    SessionConfig,
+    TrainSession,
+    default_grm_features,
+)
+
+SCRIPTS = os.path.join(os.path.dirname(__file__), "dist_scripts")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _cfg(**kw):
+    kw.setdefault("model", ARCHS["grm-4g"].reduced())
+    kw.setdefault(
+        "engine",
+        EngineConfig(backend="local-dynamic", capacity=1 << 12,
+                     chunk_rows=512, accum_batches=1),
+    )
+    kw.setdefault("dense_lr", 3e-3)
+    kw.setdefault("sparse_lr", 5e-2)
+    return SessionConfig(**kw)
+
+
+def _samples(n, seed=3, avg=24):
+    scfg = synth.SynthConfig(num_users=30, num_items=400, avg_len=avg,
+                             max_len=avg * 4, seed=7)
+    return synth.generate_samples(scfg, n, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Config surface
+# ---------------------------------------------------------------------------
+
+
+def test_session_config_validation():
+    with pytest.raises(ValueError, match="layout"):
+        _cfg(layout="ragged")
+    with pytest.raises(ValueError, match="sync"):
+        _cfg(sync="mean")
+    with pytest.raises(ValueError, match="none"):
+        _cfg(sync="none", num_devices=4)
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        _cfg(ckpt_every=5)
+    # every layout × multi-device sync combination is constructible
+    for layout in ("padded", "packed"):
+        for sync in ("weighted", "unweighted"):
+            _cfg(layout=layout, sync=sync, num_devices=4)
+
+
+# ---------------------------------------------------------------------------
+# Device-batch stacking (ragged shapes -> one leading-device-axis batch)
+# ---------------------------------------------------------------------------
+
+
+def test_stack_device_batches_padded():
+    chunks = [_samples(3, seed=0), _samples(7, seed=1)]
+    b0, b1 = pad_batch(chunks[0], 0, bucket=32), pad_batch(chunks[1], 0, bucket=32)
+    st = stack_device_batches([b0, b1])
+    D, B, S = st["item_ids"].shape
+    assert D == 2
+    assert B == max(b0["item_ids"].shape[0], b1["item_ids"].shape[0])
+    assert S == max(b0["item_ids"].shape[1], b1["item_ids"].shape[1])
+    assert st["tokens"].shape == (2,)
+    # per-device valid content survives; padding is inert
+    for d, b in enumerate((b0, b1)):
+        bd, sd = b["item_ids"].shape
+        np.testing.assert_array_equal(st["item_ids"][d, :bd, :sd], b["item_ids"])
+        assert st["mask"][d].sum() == b["mask"].sum() == int(b["tokens"])
+    assert (st["item_ids"][~st["mask"]] == -1).all()
+
+
+def test_stack_device_batches_packed():
+    chunks = [_samples(3, seed=0), _samples(7, seed=1)]
+    b0, b1 = (pack_batch(c, bucket=32, seq_bucket=4) for c in chunks)
+    st = stack_device_batches([b0, b1])
+    D, T = st["item_ids"].shape
+    assert D == 2 and T == max(b0["item_ids"].shape[0], b1["item_ids"].shape[0])
+    bp_max = max(b0["user_ids"].shape[0], b1["user_ids"].shape[0])
+    assert st["user_ids"].shape[1] == bp_max
+    for d, b in enumerate((b0, b1)):
+        t = b["item_ids"].shape[0]
+        np.testing.assert_array_equal(st["item_ids"][d, :t], b["item_ids"])
+        # appended fill keeps the stream sorted and past every real segment
+        assert (np.diff(st["seq_ids"][d]) >= 0).all()
+        assert (st["seq_ids"][d, t:] == bp_max).all()
+        assert not st["mask"][d, t:].any()
+        # offsets stay edge-extended (trailing slots empty)
+        assert (st["offsets"][d, -1] == b["offsets"][-1]).all()
+
+
+def test_engine_batch_features_sequence():
+    """Per-shard feature routing: a sequence of ragged batches routes to one
+    stacked, -1-padded id array per feature."""
+    eng = EmbeddingEngine(default_grm_features(16),
+                          EngineConfig(backend="local-dynamic",
+                                       capacity=1 << 10, chunk_rows=128),
+                          jax.random.PRNGKey(0))
+    b0 = pad_batch(_samples(2, seed=0), 0, bucket=16)
+    b1 = pad_batch(_samples(5, seed=1), 0, bucket=16)
+    feats = eng.batch_features([b0, b1])
+    assert set(feats) == {"item", "user"}
+    assert feats["item"].shape[0] == 2
+    a0 = np.asarray(feats["item"][0])
+    assert (a0[b0["item_ids"].shape[0]:] == -1).all()  # row padding
+    rows = eng.insert(feats)  # one insert serves both shards
+    assert rows["item"].shape == feats["item"].shape
+    assert (np.asarray(rows["item"])[np.asarray(feats["item"]) == -1] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# Single-device session behaviour
+# ---------------------------------------------------------------------------
+
+
+def _batches(n_batches, layout, seed=3):
+    samples = _samples(10 * n_batches, seed=seed)
+    chunks = [samples[k:k + 10] for k in range(0, len(samples), 10)]
+    if layout == "packed":
+        return [pack_batch(c, bucket=32, seq_bucket=4) for c in chunks]
+    return [pad_batch(c, 0, bucket=32) for c in chunks]
+
+
+@pytest.mark.parametrize("layout", ["padded", "packed"])
+def test_session_accepts_dict_or_sequence(layout):
+    """`train_step` takes one batch dict (single device) or a one-element
+    list — identical results either way."""
+    s1 = TrainSession(_cfg(layout=layout))
+    s2 = TrainSession(_cfg(layout=layout))
+    (b,) = _batches(1, layout)
+    m1 = s1.train_step(b)
+    m2 = s2.train_step([b])
+    assert m1 == m2
+    for k in ("loss", "loss_sum", "weight", "grad_norm"):
+        assert np.isfinite(m1[k])
+
+
+def test_session_sync_modes_agree_on_one_device():
+    """weighted == none on a single device (the shim relies on this)."""
+    (b,) = _batches(1, "padded")
+    mw = TrainSession(_cfg(sync="weighted")).train_step(b)
+    mn = TrainSession(_cfg(sync="none")).train_step(b)
+    np.testing.assert_allclose(mw["loss"], mn["loss"], rtol=1e-6)
+
+
+def test_session_run_cadence_and_restore():
+    """run() applies the checkpoint cadence; a fresh session restoring the
+    last checkpoint continues identically to the uninterrupted run."""
+    scfg = synth.SynthConfig(num_users=40, num_items=400, avg_len=24,
+                             max_len=96, seed=5)
+    with tempfile.TemporaryDirectory() as d:
+        paths = synth.write_shards(scfg, os.path.join(d, "shards"), 2, 48)
+        ck = os.path.join(d, "ckpt")
+        mk = lambda: _cfg(target_tokens=24 * 6, pad_bucket=32,
+                          ckpt_every=2, ckpt_dir=ck)
+        sess = TrainSession(mk())
+        hist = sess.run(paths, steps=4)
+        assert len(hist) == 4 and sess.step_count == 4
+        assert os.path.exists(os.path.join(ck, "meta_00000004.json"))
+
+        fresh = TrainSession(mk())
+        fresh.restore(ck, 4)
+        assert fresh.step_count == 4
+        (b,) = _batches(1, "padded", seed=9)
+        ma = sess.train_step(b)
+        mb = fresh.train_step(b)
+        np.testing.assert_allclose(ma["loss"], mb["loss"], rtol=1e-6)
+
+
+def test_session_run_eviction_cadence():
+    scfg = synth.SynthConfig(num_users=40, num_items=400, avg_len=24,
+                             max_len=96, seed=5)
+    with tempfile.TemporaryDirectory() as d:
+        paths = synth.write_shards(scfg, d, 2, 48)
+        sess = TrainSession(_cfg(target_tokens=24 * 6, pad_bucket=32,
+                                 evict_every=2, evict_n=8))
+        before = threading.active_count()
+        hist = sess.run(paths, steps=3)
+        assert len(hist) == 3
+        assert all(np.isfinite(m["loss"]) for m in hist)
+        # run() closed the per-device prefetch threads (close() joins)
+        assert threading.active_count() <= before
+
+
+def test_session_run_closes_pipelines_on_early_stop():
+    """A step budget smaller than the stream must not leak producer threads
+    blocked on full prefetch queues."""
+    scfg = synth.SynthConfig(num_users=40, num_items=400, avg_len=24,
+                             max_len=96, seed=5)
+    with tempfile.TemporaryDirectory() as d:
+        paths = synth.write_shards(scfg, d, 4, 64)  # many more batches than steps
+        sess = TrainSession(_cfg(target_tokens=24 * 4, pad_bucket=32))
+        before = threading.active_count()
+        hist = sess.run(paths, steps=2)
+        assert len(hist) == 2
+        assert threading.active_count() <= before
+
+
+# ---------------------------------------------------------------------------
+# Multi-device acceptance (forced 4-device host mesh, subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_session_multidevice_parity_4dev():
+    """Weighted-sync 4-device session over ragged per-device batches matches
+    the single-device oracle to fp32 tolerance in BOTH layouts, and weighted
+    vs unweighted sync diverge on imbalanced batches."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(SCRIPTS, "check_session_multidev.py")],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"check_session_multidev failed\n--- stdout ---\n{proc.stdout}"
+            f"\n--- stderr ---\n{proc.stderr}"
+        )
+    assert "SESSION MULTIDEV OK" in proc.stdout

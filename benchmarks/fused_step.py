@@ -1,0 +1,73 @@
+"""Fused device-resident step vs the host-driven update path (tentpole
+artifact): per-step time and host<->device transfer volume, both layouts, on
+a forced 4-device mesh.
+
+The host-driven path (`fused_update=False`) pays the two per-step costs the
+paper's update stream eliminates (§4.3, §5.2): the full embedding tables are
+re-replicated host->device every step, and O(batch*d) per-slot gradients
+return to a host-side accumulate/rowwise-Adam pipeline of separate
+dispatches. The fused path borrows the tables once (device-resident across
+steps, donated through the jitted program) and moves only the batch and its
+O(unique batch IDs) row handles — the h2d column drops from O(table) to
+O(batch), and the step time follows.
+
+Writes BENCH_fused_step.json (benchmarks/common.write_bench_json) with the
+per-combination rows and the host/fused speedups; registered in
+benchmarks/run.py as `fused_step`.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import Table, run_worker, write_bench_json
+
+DEVICES = 4
+ITERS = 3
+TABLE_ROWS_TARGET = 24576  # prewarmed table scale (rows across merged tables)
+
+
+def _worker_row(layout: str, mode: str) -> dict:
+    out = run_worker("fused_step_worker.py", str(DEVICES), layout, mode,
+                     str(ITERS), str(TABLE_ROWS_TARGET), devices=DEVICES)
+    line = [l for l in out.strip().splitlines() if l.startswith("{")][-1]
+    return json.loads(line)
+
+
+def run() -> Table:
+    t = Table(
+        "fused_step",
+        ["layout", "mode", "devices", "step_ms", "h2d_mb_per_step",
+         "d2h_mb_per_step", "table_rows", "speedup_vs_host"],
+    )
+    rows = []
+    speedups = {}
+    for layout in ("padded", "packed"):
+        host = _worker_row(layout, "host")
+        fused = _worker_row(layout, "fused")
+        speedups[layout] = round(host["step_ms"] / max(fused["step_ms"], 1e-9), 2)
+        for r in (host, fused):
+            rows.append(r)
+            t.add(
+                r["layout"], r["mode"], r["devices"], r["step_ms"],
+                round(r["h2d_bytes_per_step"] / 1e6, 3),
+                round(r["d2h_bytes_per_step"] / 1e6, 6),
+                r["table_rows"],
+                speedups[layout] if r["mode"] == "fused" else 1.0,
+            )
+    write_bench_json("fused_step", {
+        "config": {
+            "devices": DEVICES,
+            "iters": ITERS,
+            "table_rows_target": TABLE_ROWS_TARGET,
+            "note": "forced host-device mesh; CPU wall clock at smoke scale "
+                    "— the host/fused ratio and the transfer columns are "
+                    "the artifacts (h2d drops from O(table) to O(batch))",
+        },
+        "rows": rows,
+        "speedup_vs_host": speedups,
+    })
+    return t
+
+
+if __name__ == "__main__":
+    print(run().render())

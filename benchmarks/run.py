@@ -14,8 +14,9 @@ Some benchmarks also write repo-root BENCH_<name>.json trajectory artifacts
 (common.write_bench_json): packed_vs_padded -> BENCH_packed.json,
 fig17_scalability -> BENCH_scalability.json (analytic model + measured
 multi-device TrainSession rows), fig14_seq_balancing ->
-BENCH_seq_balancing.json. CI uploads them so multi-device numbers are
-recorded per commit.
+BENCH_seq_balancing.json, fused_step -> BENCH_fused_step.json (device-
+resident fused step vs host-driven update, time + transfer volume). CI
+uploads them so multi-device numbers are recorded per commit.
 """
 from __future__ import annotations
 
@@ -36,6 +37,8 @@ BENCHMARKS = {
     "fig17_scalability": ("benchmarks.scalability", "Fig. 17 scalability"),
     "packed_vs_padded": ("benchmarks.packed_vs_padded",
                          "Packed (jagged) vs padded GRM step"),
+    "fused_step": ("benchmarks.fused_step",
+                   "Fused device-resident vs host-driven session step"),
     "roofline": ("benchmarks.roofline", "§Roofline all 40 pairs"),
 }
 

@@ -1,0 +1,144 @@
+"""Fused-step worker: one TrainSession step-time + transfer measurement on a
+forced host-device mesh. Prints one JSON line:
+
+    {"devices": D, "layout": ..., "mode": "host"|"fused", "steps": N,
+     "step_ms": median wall ms/step, "table_rows": R, "table_bytes": ...,
+     "h2d_bytes_per_step": ..., "d2h_bytes_per_step": ...}
+
+`mode="host"` is the host-driven update path (`fused_update=False`): every
+step re-replicates the full embedding tables host->device and returns
+O(batch*d) per-slot gradients to the host-side update stream.
+`mode="fused"` keeps the sparse state device-resident (borrowed once) and
+fuses dedup -> unique gather -> rowwise Adam into the jitted step — per-step
+transfers shrink to the batch and its O(batch) row handles.
+
+The byte columns are *logical* per-step host<->device volumes computed from
+array shapes (forced host devices share one address space, so memcpy-level
+accounting would under-report a real accelerator): tables count once per
+device they are replicated onto; the fused mode moves no table bytes at all.
+
+NOTE: this container has ONE cpu core — absolute times are CPU wall clock at
+smoke scale; the host-vs-fused *ratio* is the reproduced artifact (the
+removed per-step O(table) replication dominates exactly as the transfer
+column predicts).
+"""
+import json
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS
+from repro.data import synth
+from repro.data.sequence_balancing import pack_batch, pad_batch
+from repro.embedding import EngineConfig
+from repro.train.session import SessionConfig, TrainSession
+
+NUM_ITEMS = 4096  # batch IDs stay inside the prewarmed set (no growth mid-timing)
+NUM_USERS = 512
+AVG_LEN = 32
+SEQS_PER_DEV = 6
+
+
+def build_session(devices: int, layout: str, fused: bool) -> TrainSession:
+    return TrainSession(SessionConfig(
+        model=ARCHS["grm-4g"].reduced(),
+        engine=EngineConfig(backend="local-dynamic", capacity=1 << 16,
+                            chunk_rows=8192, accum_batches=1),
+        num_devices=devices,
+        layout=layout,
+        sync="weighted" if devices > 1 else "none",
+        fused_update=fused,
+        dense_lr=3e-3,
+        sparse_lr=5e-2,
+    ))
+
+
+def prewarm(sess: TrainSession, rows_target: int) -> None:
+    """Admit every ID the batches can contain plus filler, so the table is
+    production-sized and the timed steps never trigger growth."""
+    eng = sess.engine
+    eng.insert({
+        "item": jnp.asarray(np.arange(NUM_ITEMS), jnp.int64),
+        "user": jnp.asarray(np.arange(NUM_USERS), jnp.int64),
+    })
+    filler = np.arange(NUM_ITEMS, rows_target - NUM_USERS)
+    for k in range(0, filler.size, 8192):
+        eng.insert({"item": jnp.asarray(filler[k:k + 8192], jnp.int64)})
+
+
+def device_batches(devices: int, layout: str):
+    scfg = synth.SynthConfig(num_users=NUM_USERS, num_items=NUM_ITEMS,
+                             avg_len=AVG_LEN, max_len=AVG_LEN * 3, seed=0)
+    samples = synth.generate_samples(scfg, SEQS_PER_DEV * devices, seed=1)
+    chunks = [samples[d * SEQS_PER_DEV:(d + 1) * SEQS_PER_DEV]
+              for d in range(devices)]
+    if layout == "packed":
+        return [pack_batch(c, bucket=32, seq_bucket=4) for c in chunks]
+    return [pad_batch(c, 0, bucket=32) for c in chunks]
+
+
+def transfer_accounting(sess: TrainSession, batches, fused: bool) -> dict:
+    """Logical per-step host<->device byte volumes from array shapes."""
+    stacked = sess._stack(batches)
+    rows = sess._sparse_phase(stacked)
+    d = sess.cfg.model.d_model
+    devices = sess.cfg.num_devices
+    backend = sess.engine.backend
+    table_bytes = sum(
+        backend.row_capacity(t) * d * 4 for t in backend.table_names()
+    )
+    rows_bytes = sum(int(np.prod(r.shape)) * 4 for r in rows.values())
+    batch_keys = ["labels", "mask"] + (
+        ["seq_ids", "positions"] if sess.packed else []
+    )
+    batch_bytes = sum(np.asarray(stacked[k]).nbytes for k in batch_keys)
+    grads_bytes = sum(int(np.prod(r.shape)) * d * 4 for r in rows.values())
+    if fused:
+        h2d = rows_bytes + batch_bytes  # the batch is ALL that moves
+        d2h = 4 * 4  # four scalar metrics
+    else:
+        # the host path replicates every table to every device, each step,
+        # and pulls the per-slot gradients back into the host update stream
+        h2d = devices * table_bytes + rows_bytes + batch_bytes
+        d2h = grads_bytes + 4 * 4
+    return {
+        "table_rows": max(backend.row_capacity(t)
+                          for t in backend.table_names()),
+        "table_bytes": table_bytes,
+        "h2d_bytes_per_step": h2d,
+        "d2h_bytes_per_step": d2h,
+    }
+
+
+def main(devices: int, layout: str, mode: str, iters: int,
+         rows_target: int) -> None:
+    fused = mode == "fused"
+    sess = build_session(devices, layout, fused)
+    prewarm(sess, rows_target)
+    batches = device_batches(devices, layout)
+    acct = transfer_accounting(sess, batches, fused)
+
+    jax.block_until_ready(sess.train_step(batches))  # compile + first step
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(sess.train_step(batches))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    print(json.dumps({
+        "devices": devices,
+        "layout": layout,
+        "mode": mode,
+        "steps": iters,
+        "step_ms": round(times[len(times) // 2] * 1e3, 2),
+        **acct,
+    }))
+
+
+if __name__ == "__main__":
+    main(int(sys.argv[1]), sys.argv[2], sys.argv[3], int(sys.argv[4]),
+         int(sys.argv[5]))

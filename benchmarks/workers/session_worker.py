@@ -18,6 +18,7 @@ import sys
 import tempfile
 import time
 
+import jax
 import numpy as np
 
 from repro.configs.registry import ARCHS
@@ -49,6 +50,9 @@ def main(devices: int, steps: int, layout: str, sync: str) -> None:
         t_prev = [None]
 
         def on_step(step, m):
+            # Metrics are async device scalars now — block before taking the
+            # timestamp so times[] measures compute, not dispatch enqueue.
+            jax.block_until_ready(m)
             now = time.perf_counter()
             if t_prev[0] is not None:
                 times.append(now - t_prev[0])

@@ -60,6 +60,26 @@ def accumulate(acc: SparseGradAccum, rows: jax.Array, grads: jax.Array) -> Spars
     return SparseGradAccum(new_rows, new_grads, fill)
 
 
+def grow(acc: SparseGradAccum, slots: int) -> SparseGradAccum:
+    """Migrate an accumulator to a larger capacity, preserving every pending
+    (row, grad) entry and the fill cursor.
+
+    Device-to-device concatenation only — no host round trip — so callers
+    (EmbeddingEngine.apply_grads, the fused TrainSession step) can widen the
+    window when batch widths grow instead of discarding or force-flushing the
+    gradients already accumulated.
+    """
+    old = acc.rows.shape[0]
+    if slots <= old:
+        return acc
+    d = acc.grads.shape[1]
+    return SparseGradAccum(
+        jnp.concatenate([acc.rows, jnp.full((slots - old,), -1, jnp.int32)]),
+        jnp.concatenate([acc.grads, jnp.zeros((slots - old, d), jnp.float32)]),
+        acc.fill,
+    )
+
+
 def drain(
     acc: SparseGradAccum, out_slots: int, *, impl: str = "auto"
 ) -> Tuple[jax.Array, jax.Array, SparseGradAccum]:

@@ -33,6 +33,19 @@ dense array returned by `table_emb()`. Handles are what the jitted train step
 gathers with — O(batch) work, never O(table) — and what `apply_grads` scatters
 into. For sharded backends a handle is `shard * row_stride + local_row` with a
 fixed stride, so handles stay valid across chunked growth.
+
+Device-resident views
+---------------------
+`table_emb` / `set_table_emb` are also the *borrow/commit* anchors of the
+device-resident training mode (`EmbeddingEngine.device_view`): the fused
+train step borrows each table's dense array (plus the engine-owned rowwise
+moments) ONCE, trains on donated device buffers across steps, and commits
+through `set_table_emb` only at control-plane boundaries (checkpoint,
+eviction, expansion — see embedding/device_view.py). Backends therefore must
+treat `set_table_emb` as a full-array replacement whose shape matches the
+current `row_capacity`, and must keep handles append-only under growth
+(rows never move except during `evict` compaction, which the engine fences
+with a commit).
 """
 from __future__ import annotations
 

@@ -1,0 +1,124 @@
+"""Device-resident sparse state: the borrow/commit view over engine tables.
+
+The paper's throughput numbers depend on the sparse path never leaving the
+accelerator between steps (§4.3, §5.2): feature dedup, the unique-row gather,
+and the rowwise optimizer all run in the training step's compiled program,
+and the *tables themselves* stay device-resident — the host re-materializes
+them only at real control-plane boundaries (checkpoint save/load, eviction
+compaction, key/chunk expansion).
+
+`SparseDeviceView` is that contract, engine-side:
+
+  * `EmbeddingEngine.device_view(put=...)` **borrows** every merged table's
+    embedding array and rowwise-Adam moments into device buffers (one
+    placement, not one per step). While a view is live, the backend's host
+    copies are stale; `emb_of`/`opt_state` transparently read the view.
+  * The fused train step takes the view's buffers as **donated** jit
+    arguments and the session writes the step outputs back into the view —
+    zero host↔device traffic per step beyond the batch itself.
+  * **Commit** (`EmbeddingEngine.flush()` and everything routed through it:
+    `evict`, `save`, `lookup`, `apply_grads`) writes the buffers back through
+    `set_table_emb` and drops the view; the next step re-borrows. Boundaries
+    therefore cost one table round trip each, amortized over their cadence.
+  * **Growth** (`insert` triggering chunk/key expansion) migrates the view in
+    place: the new rows — which only the host-side table knows — are appended
+    to the device buffers and the moments are zero-extended
+    (`RowwiseAdam.migrate`); row handles stay valid throughout (§4.1:
+    embedding rows never move on expansion).
+
+Borrowed buffers are defensively copied at borrow time so donation can never
+invalidate the host-side structures the control plane still reads (chunk
+growth concatenates onto the host array; the migration suffix is read from
+it).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grad_accum as ga
+from repro.optim.rowwise_adam import RowwiseAdam, RowwiseAdamState
+
+
+class SparseDeviceView:
+    """Borrowed device-resident (table, moments, accum-window) buffers."""
+
+    def __init__(
+        self,
+        tables: Tuple[str, ...],
+        emb: Dict[str, jax.Array],
+        opt: Dict[str, RowwiseAdamState],
+        put: Optional[Callable] = None,
+    ):
+        self.tables = tuple(tables)
+        self.emb = emb
+        self.opt = opt
+        # Fused accumulation window (accum_batches > 1): device-resident
+        # SparseGradAccum per table + the host-side fill bound / window
+        # counter that mirror EmbeddingEngine's (no device syncs).
+        self.acc: Dict[str, ga.SparseGradAccum] = {}
+        self.acc_used: Dict[str, int] = {}
+        self.window_count = 0
+        self._put = put or (lambda tree: tree)
+
+    @classmethod
+    def borrow(cls, backend, opt_states: Dict[str, RowwiseAdamState],
+               put: Optional[Callable] = None) -> "SparseDeviceView":
+        """Materialize device buffers for every merged table ONCE.
+
+        `put` places trees on the target sharding (the session passes its
+        replicated put under a mesh). The extra `jnp.copy` breaks aliasing
+        with the backend's host arrays: donation of a borrowed buffer must
+        never invalidate host state (growth reads the host array's suffix).
+        """
+        place = put or (lambda tree: tree)
+        fresh = lambda tree: place(jax.tree.map(jnp.copy, tree))
+        tables = backend.table_names()
+        return cls(
+            tables,
+            {t: fresh(backend.table_emb(t)) for t in tables},
+            {t: fresh(opt_states[t]) for t in tables},
+            put=put,
+        )
+
+    def row_capacity(self, table: str) -> int:
+        return self.emb[table].shape[0]
+
+    def migrate_capacity(self, table: str, host_emb: jax.Array,
+                         sparse_opt: RowwiseAdam) -> None:
+        """Follow a chunk/key expansion without a full round trip: append the
+        host table's new rows (handles are append-only under growth, §4.1)
+        and zero-extend the moments. O(new rows), not O(table)."""
+        old = self.emb[table].shape[0]
+        new = host_emb.shape[0]
+        if new == old:
+            return
+        if new < old:
+            raise ValueError(
+                f"device view of {table!r} cannot shrink ({old} -> {new}); "
+                "compactions must commit the view first"
+            )
+        self.emb[table] = self._put(
+            jnp.concatenate([self.emb[table], host_emb[old:]], axis=0)
+        )
+        self.opt[table] = self._put(sparse_opt.migrate(self.opt[table], new))
+
+    def ensure_accum(self, table: str, add_slots: int, dim: int,
+                     window: int) -> None:
+        """Guarantee the device accumulator can take `add_slots` more entries
+        (grown in place — pending gradients are never dropped)."""
+        need = self.acc_used.get(table, 0) + add_slots
+        acc = self.acc.get(table)
+        if acc is None:
+            self.acc[table] = self._put(
+                ga.init_accumulator(max(need, add_slots * max(1, window)), dim)
+            )
+        elif acc.rows.shape[0] < need:
+            # re-place like the init path: growth must keep the view's
+            # (replicated) sharding or every later window pays a reshard
+            self.acc[table] = self._put(ga.grow(acc, need))
+
+
+__all__ = ["SparseDeviceView"]

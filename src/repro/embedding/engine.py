@@ -17,6 +17,17 @@ The engine *owns* the sparse optimizer: per-table rowwise Adam states follow
 the tables through chunked growth (moments are migrated, never reset — the
 fix over the seed trainer's reset-on-growth) and through eviction compaction
 (moments move with their surviving rows).
+
+Device-resident mode (the fused TrainSession step) adds a seventh verb:
+
+    engine.device_view(put)       # borrow tables + moments as device buffers
+
+While a view is live the tables train entirely on-device (the fused step
+donates and returns the buffers); the engine keeps every host-facing verb
+correct by reading through the view (`emb_of`, `opt_state`) or committing it
+first (`flush`, and thus `evict`/`save`; `lookup`; `apply_grads`). `insert`
+migrates the view across chunk/key expansion in O(new rows). See
+embedding/device_view.py for the state machine.
 """
 from __future__ import annotations
 
@@ -32,6 +43,7 @@ from repro.core.table_merging import FeatureConfig
 from repro.optim.rowwise_adam import RowwiseAdam, RowwiseAdamState
 
 from repro.embedding.base import EngineConfig
+from repro.embedding.device_view import SparseDeviceView
 from repro.embedding.local_backends import LocalDynamicBackend, LocalStaticBackend
 from repro.embedding.sharded_backends import (
     ShardedDynamicBackend,
@@ -66,6 +78,7 @@ class EmbeddingEngine:
         self._accums: Dict[str, ga.SparseGradAccum] = {}
         self._accum_used: Dict[str, int] = {}  # host-side fill bound (no syncs)
         self._accum_count = 0
+        self._view: Optional[SparseDeviceView] = None  # device-resident state
 
     # ------------------------------------------------------------------
     # Topology
@@ -116,16 +129,82 @@ class EmbeddingEngine:
         return out
 
     # ------------------------------------------------------------------
+    # Device-resident state (the fused train step's borrow/commit seam)
+    # ------------------------------------------------------------------
+
+    def device_view(self, put=None) -> SparseDeviceView:
+        """Borrow every merged table's embedding array + rowwise-Adam moments
+        as device-resident buffers (ONE placement, reused across steps).
+
+        The fused train step donates these buffers to its jitted program and
+        writes the outputs back into the view — per-step host↔device traffic
+        shrinks to the batch itself. The view stays live until a control-
+        plane boundary commits it (flush/evict/save/lookup); `insert` keeps
+        it valid across table growth. Idempotent while live."""
+        if self._view is None:
+            for t in self.backend.table_names():
+                self._opt_state_for(t)  # sized to current capacity
+            self._view = SparseDeviceView.borrow(
+                self.backend, self._opt_states, put
+            )
+        return self._view
+
+    def has_device_view(self) -> bool:
+        return self._view is not None
+
+    def _commit_device_view(self) -> None:
+        """Write the borrowed buffers back to the backend (host-authoritative
+        again) and drop the view. Pending fused-window gradients move into
+        the engine's accumulators so the ordinary flush applies them.
+
+        Only `flush()` calls this, so parked window gradients drain
+        immediately — but merge defensively anyway: if the host accumulator
+        already holds pending entries, append instead of overwrite (a
+        replace here would silently drop gradients)."""
+        v, self._view = self._view, None
+        if v is None:
+            return
+        for t in v.tables:
+            self.backend.set_table_emb(t, v.emb[t])
+            self._opt_states[t] = v.opt[t]
+        for t, acc in v.acc.items():
+            used = v.acc_used.get(t, 0)
+            if not used:
+                continue
+            host = self._accums.get(t)
+            host_used = self._accum_used.get(t, 0)
+            if host is None or host_used == 0:
+                self._accums[t] = acc
+                self._accum_used[t] = used
+            else:
+                host = ga.grow(host, host_used + used)
+                self._accums[t] = ga.accumulate(host, acc.rows, acc.grads)
+                self._accum_used[t] = host_used + used
+
+    # ------------------------------------------------------------------
     # Forward path
     # ------------------------------------------------------------------
 
     def insert(self, feats: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
         """Real-time ID admission (§4.1): insert unseen IDs, return int32 row
         handles (same shape as the IDs; -1 = padding/absent). Handles index
-        `emb_of(feature)` — the O(batch) gather path for jitted train steps."""
+        `emb_of(feature)` — the O(batch) gather path for jitted train steps.
+
+        With a live device view, chunk/key expansion triggered by the insert
+        migrates the view in place (new rows appended, moments zero-extended)
+        — handles resolved before AND after the growth stay valid."""
         for f in feats:
             self._check(f)
-        return self.backend.insert(feats)
+        if self._view is None:
+            return self.backend.insert(feats)
+        caps = {t: self.backend.row_capacity(t) for t in self._view.tables}
+        out = self.backend.insert(feats)
+        for t in self._view.tables:
+            if self.backend.row_capacity(t) != caps[t]:
+                self._view.migrate_capacity(
+                    t, self.backend.table_emb(t), self.sparse_opt
+                )
+        return out
 
     def rows_for(self, feature: str, ids: jax.Array) -> jax.Array:
         """Read-only resolve (no insertion)."""
@@ -133,9 +212,13 @@ class EmbeddingEngine:
         return self.backend.rows_for(feature, ids)
 
     def emb_of(self, feature: str) -> jax.Array:
-        """The dense (rows, d) array that this feature's handles index."""
+        """The dense (rows, d) array that this feature's handles index.
+        Reads through the device view when one is live (no commit)."""
         self._check(feature)
-        return self.backend.table_emb(self.backend.table_of(feature))
+        table = self.backend.table_of(feature)
+        if self._view is not None:
+            return self._view.emb[table]
+        return self.backend.table_emb(table)
 
     def lookup(
         self,
@@ -159,6 +242,14 @@ class EmbeddingEngine:
         feats = {f: jnp.asarray(ids) for f, ids in batch.items()}
         for f in feats:
             self._check(f)
+        if self._view is not None:
+            # The backend's raw lookup reads its own storage — make it
+            # current first. flush (not a bare commit) so a partial fused
+            # accumulation window applies NOW rather than being parked
+            # (where a later commit could clobber it) — a mid-window
+            # boundary ends the window early, same as evict/save. Costs one
+            # round trip; training re-borrows on the next fused step.
+            self.flush()
         if self.backend.dynamic and not assume_inserted:
             self.backend.insert(feats)
         raw, stats = self.backend.raw_lookup(feats, step, with_stats)
@@ -190,6 +281,8 @@ class EmbeddingEngine:
         (duplicate rows sum — "sparse aggregation"), then one rowwise-Adam
         update touches only the activated rows.
         """
+        if self._view is not None:
+            self.flush()  # commit + apply any pending fused-window grads
         per_table: Dict[str, Tuple[list, list]] = {}
         for f, r in rows.items():
             self._check(f)
@@ -200,28 +293,46 @@ class EmbeddingEngine:
             bucket[1].append(
                 jnp.asarray(g).reshape(-1, g.shape[-1]).astype(jnp.float32)
             )
+        window = max(1, self.cfg.accum_batches)
         for t, (rs, gs) in per_table.items():
             r = jnp.concatenate(rs)
             g = jnp.concatenate(gs)
-            needed = r.shape[0] * max(1, self.cfg.accum_batches)
+            if window == 1:
+                # No accumulation window: dedup + rowwise update in one shot
+                # (RowwiseAdam.dedup_update) — skips the accumulator
+                # round trip the windowed path below needs.
+                emb = self.backend.table_emb(t)
+                st = self._opt_state_for(t)
+                new_emb, st = self.sparse_opt.dedup_update(emb, st, r, g)
+                self._opt_states[t] = st
+                self.backend.set_table_emb(t, new_emb)
+                continue
+            needed = r.shape[0] * window
             # `used` is a host-side upper bound on acc.fill (pad entries count
-            # too) so the overflow check never syncs with the device.
+            # too) so the overflow/grow checks never sync with the device.
             used = self._accum_used.get(t, 0)
             acc = self._accums.get(t)
-            if acc is not None and acc.rows.shape[0] < used + r.shape[0]:
-                self._flush_table(t)  # would overflow: apply what we hold
-                used = 0
-                acc = self._accums.get(t)
-            if acc is None or acc.rows.shape[0] < needed:
+            if acc is None:
                 acc = ga.init_accumulator(needed, g.shape[-1])
+            elif acc.rows.shape[0] < max(needed, used + r.shape[0]):
+                # Batch widths grew mid-window: migrate the live accumulator
+                # instead of reallocating (which silently dropped the `used`
+                # pending entries) or force-flushing (which cut the window
+                # short). Pending gradients survive, capacity stays bounded
+                # by the largest window.
+                acc = ga.grow(acc, max(needed, used + r.shape[0]))
             self._accums[t] = ga.accumulate(acc, r, g)
             self._accum_used[t] = used + r.shape[0]
         self._accum_count += 1
-        if self._accum_count >= self.cfg.accum_batches:
+        if self._accum_count >= window:
             self.flush()
 
     def flush(self) -> None:
-        """Apply all pending accumulated sparse gradients now."""
+        """Apply all pending accumulated sparse gradients now. Commits a live
+        device view first (evict/save/checkpoint boundaries route through
+        here), so pending fused-window gradients are applied too."""
+        if self._view is not None:
+            self._commit_device_view()
         for t in list(self._accums):
             self._flush_table(t)
         self._accum_count = 0
@@ -252,6 +363,8 @@ class EmbeddingEngine:
         return st
 
     def opt_state(self, table: str) -> Optional[RowwiseAdamState]:
+        if self._view is not None and table in self._view.opt:
+            return self._view.opt[table]
         return self._opt_states.get(table)
 
     # ------------------------------------------------------------------
@@ -335,6 +448,7 @@ class EmbeddingEngine:
         self._accums = {}
         self._accum_used = {}
         self._accum_count = 0
+        self._view = None  # restored host state is authoritative
 
     # ------------------------------------------------------------------
 

@@ -9,6 +9,13 @@ O(rows x dim) — the memory trick industrial systems use for TB-scale tables.
 The update consumes the deduplicated (unique row, summed grad) pairs emitted
 by `core/grad_accum.py`: only those rows' moments and weights are touched,
 via scatter ops; everything else is left untouched at zero cost.
+
+`update` is pure jnp and shape-static, so it composes into larger jitted
+programs: the fused `TrainSession` step donates the table and the moment
+buffers and runs dedup -> gather -> backward -> `update` as ONE program with
+no host materialization (see train/session.py). `dedup_update` is the
+convenience form for callers holding raw (possibly duplicated) per-slot
+gradients rather than a pre-deduplicated stream.
 """
 from __future__ import annotations
 
@@ -99,3 +106,28 @@ class RowwiseAdam:
             nu_new, mode="drop"
         )
         return emb, RowwiseAdamState(t, mu, nu)
+
+    def dedup_update(
+        self,
+        emb: jax.Array,  # (rows, d) table
+        state: RowwiseAdamState,
+        rows: jax.Array,  # (n,) int32 touched rows, duplicates fine (-1 = pad)
+        row_grads: jax.Array,  # (n, d) per-slot gradients (duplicates sum)
+    ) -> Tuple[jax.Array, RowwiseAdamState]:
+        """In-jit unique-rows update from raw (row, grad) pairs.
+
+        §5.2 "sparse aggregation" as one jittable program: dedup the row
+        handles (`core.dedup.unique_static`), scatter-sum duplicate slots'
+        gradients onto the unique rows, then apply the rowwise update once
+        per unique row. Semantically `accumulate` + `drain` + `update` over a
+        single batch, without the accumulator round trip.
+        """
+        from repro.core.dedup import unique_static
+
+        u = unique_static(rows.reshape(-1).astype(jnp.int32), rows.size)
+        g = row_grads.reshape(-1, row_grads.shape[-1]).astype(jnp.float32)
+        valid = rows.reshape(-1) >= 0
+        summed = jnp.zeros((rows.size, g.shape[-1]), jnp.float32).at[
+            jnp.where(valid, u.inverse, rows.size)
+        ].add(jnp.where(valid[:, None], g, 0.0), mode="drop")
+        return self.update(emb, state, u.ids, summed)

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterator
 
+import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
@@ -71,11 +72,12 @@ class GRMTrainer:
 
     # -- the old loop surface ------------------------------------------
 
-    def train_step(self, batch: Dict[str, np.ndarray]) -> Dict[str, float]:
-        """One host-driven step over a single balanced batch (unpipelined)."""
+    def train_step(self, batch: Dict[str, np.ndarray]) -> Dict[str, jax.Array]:
+        """One step over a single balanced batch (unpipelined). Metrics are
+        async device scalars (convert with float()/int() when reading)."""
         return self.session.train_step(batch)
 
-    def train_stream(self, batches) -> "Iterator[Dict[str, float]]":
+    def train_stream(self, batches) -> "Iterator[Dict[str, jax.Array]]":
         """Pipelined training (§3): sparse dispatch of batch T+1 overlaps the
         dense compute of batch T (see `TrainSession.train_stream`)."""
         return self.session.train_stream(batches)

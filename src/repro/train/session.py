@@ -28,16 +28,37 @@ What the session owns, per step (the paper's three-stream pipeline, §3):
     global-sum / global-weight — the pjit-native realization of §5.1
     batch-size-weighted gradient sync (see train/weighted_sync.py for the
     algebra and the explicit shard_map form it is tested against);
-  * the update stream: engine-side sparse accumulation + rowwise Adam on
-    the touched rows of every device, dense Adam, and the checkpoint /
-    eviction cadence.
+  * the update stream: sparse accumulation + rowwise Adam on the touched
+    rows of every device, dense Adam, and the checkpoint / eviction cadence.
+
+Device-resident sparse state (`fused_update=True`, the default)
+---------------------------------------------------------------
+The sparse state — embedding tables, rowwise-Adam moments, and the §5.2
+accumulation window — lives ON DEVICE across steps (the paper's update
+stream, §4.3 + §5.2): the session borrows the engine's tables once
+(`engine.device_view`) and the jitted step takes them as **donated**
+arguments, dedups the batch's row handles in-jit (`core.dedup`), gathers
+only the unique rows, runs fwd/bwd against the unique gather (the
+inverse-index gather's transpose delivers gradients pre-summed per unique
+row across every feature and device), applies rowwise Adam with one scatter,
+and returns the updated tables/moments. Dense params + Adam state are
+likewise device-resident and updated inside the same program. Per-step
+host→device traffic is the batch and its handles — O(unique batch IDs) —
+never O(table); the host re-materializes tables only at control-plane
+boundaries (checkpoint save/restore, eviction, chunk/key expansion — see
+embedding/device_view.py). `fused_update=False` keeps the host-driven
+update path (engine.apply_grads + out-of-jit optimizers) as the parity
+oracle.
 
 `train_stream` overlaps the host sparse phase of batch T+1 with the async
 device compute of batch T — the dispatch/compute/update overlap previously
 hand-coded in `GRMTrainer.train_stream` (which is now a shim over this
-class). Multi-host (`jax.distributed`) backends plug in at the same seam:
-a process-local mesh slice replaces the forced host mesh, everything above
-this module is unchanged.
+class). Step metrics are returned as *async device scalars* (no forced
+sync in the step path — convert with float() when you actually read them),
+so the overlap is never broken by metric readback. Multi-host
+(`jax.distributed`) backends plug in at the same seam: a process-local mesh
+slice replaces the forced host mesh, everything above this module is
+unchanged.
 
 Ragged per-device batches: dynamic sequence balancing gives every device a
 different batch shape, so `stack_device_batches` pads to the per-dim max
@@ -60,6 +81,8 @@ from repro.ckpt import checkpoint as C
 from repro.common import compat
 from repro.common.params import init_params
 from repro.configs.base import ModelConfig
+from repro.core import dedup
+from repro.core import grad_accum as ga
 from repro.data.pipeline import make_input_pipeline
 from repro.data.sequence_balancing import stack_device_batches
 from repro.embedding import EmbeddingEngine, EngineConfig, FeatureConfig
@@ -91,6 +114,11 @@ class SessionConfig:
                   gradients (what plain All-Reduce-mean DDP computes).
       none        no cross-device reduction semantics; single-device only
                   (on one device it coincides with `weighted`).
+
+    `fused_update` keeps the sparse state device-resident and fuses
+    dedup -> unique gather -> fwd/bwd -> rowwise Adam into the jitted step
+    (module docstring); `False` selects the host-driven update path (the
+    parity oracle).
     """
 
     model: ModelConfig
@@ -105,6 +133,9 @@ class SessionConfig:
     # batch layout and gradient synchronization
     layout: str = "padded"  # padded | packed (jagged single stream)
     sync: str = "weighted"  # weighted | unweighted | none
+
+    # sparse/dense update placement (module docstring)
+    fused_update: bool = True  # device-resident state + in-jit sparse update
 
     # input pipeline (per device; Algorithm 1 when balanced)
     balanced: bool = True
@@ -187,11 +218,26 @@ class TrainSession:
         self._step_fn = jax.jit(
             functools.partial(_session_step, cfg=cfg.model, sync=cfg.sync)
         )
+        # Fused path: one jitted wrapper per (feature->table map, window
+        # phase). Donation lets XLA reuse the table/moment buffers in place;
+        # the CPU backend ignores donation (with a warning), so gate it — the
+        # defensive copy at borrow time keeps both settings safe.
+        self._fused_fns: Dict[Tuple, object] = {}
+        self._donate = jax.default_backend() != "cpu"
+        if cfg.fused_update:
+            # Dense state is device-resident from step 0: placed (replicated
+            # under a mesh) once, donated + returned by every step.
+            self.dense_params = self._put_replicated(self.dense_params)
+            self.dense_opt_state = self._put_replicated(self.dense_opt_state)
         self.step_count = 0
 
     @property
     def packed(self) -> bool:
         return self.cfg.layout == "packed"
+
+    @property
+    def fused(self) -> bool:
+        return self.cfg.fused_update
 
     # ------------------------------------------------------------------
     # Data plane: one balanced pipeline per device (paper §3 'Data I/O')
@@ -244,11 +290,12 @@ class TrainSession:
         across ALL device batches at once (the engine routes the stacked
         (D, ...) id arrays per merged table), resolve row handles. Handles
         are stable under subsequent inserts, so this may safely run ahead of
-        the previous batch's compute (§3 'Pipeline')."""
+        the previous batch's compute (§3 'Pipeline'). Under `fused_update`
+        the insert also migrates the device view across table growth."""
         feats = self.engine.batch_features(stacked)
         return self.engine.insert(feats)
 
-    def _put_batch(self, x: np.ndarray) -> jax.Array:
+    def _put_batch(self, x) -> jax.Array:
         """Device placement: shard the leading device axis over the mesh's
         data axis (GSPMD then runs the step data-parallel); single-device
         sessions skip the sharding."""
@@ -265,6 +312,8 @@ class TrainSession:
     def _dispatch(self, stacked: Batch, rows: Dict[str, jax.Array]):
         """Compute-stream work: enqueue the jitted fwd+bwd (non-blocking —
         jax dispatch is async; the host returns immediately)."""
+        if self.fused:
+            return self._dispatch_fused(stacked, rows)
         embs = {f: self.engine.emb_of(f) for f in rows}
         embs = self._put_replicated(embs)
         params = self._put_replicated(self.dense_params)
@@ -281,24 +330,118 @@ class TrainSession:
             ]
         return self._step_fn(*args)
 
-    def _finish(self, rows, outputs) -> Dict[str, float]:
-        """Update-stream work: engine-side sparse path + dense optimizer."""
-        loss, metrics, dense_grads, emb_grads = outputs
-        self.engine.apply_grads(rows, emb_grads)
-        self.dense_params, self.dense_opt_state = self.dense_opt.update(
-            dense_grads, self.dense_opt_state, self.dense_params
-        )
-        self.step_count += 1
-        return {k: float(v) for k, v in metrics.items()} | {"loss": float(loss)}
+    # -- fused path (device-resident sparse state) ---------------------
 
-    def train_step(self, batches) -> Dict[str, float]:
+    def _fused_fn(self, feat_table: Tuple[Tuple[str, str], ...],
+                  apply_now: bool, drain_tables: Tuple[str, ...] = ()):
+        key = (feat_table, apply_now, drain_tables)
+        fn = self._fused_fns.get(key)
+        if fn is None:
+            fn = jax.jit(
+                functools.partial(
+                    _session_step_fused,
+                    cfg=self.cfg.model, sync=self.cfg.sync,
+                    dense_opt=self.dense_opt,
+                    sparse_opt=self.engine.sparse_opt,
+                    feat_table=feat_table, apply_now=apply_now,
+                    drain_tables=drain_tables,
+                ),
+                donate_argnums=(0, 1, 2, 3, 4) if self._donate else (),
+            )
+            self._fused_fns[key] = fn
+        return fn
+
+    def _dispatch_fused(self, stacked: Batch, rows: Dict[str, jax.Array]):
+        """One donated jitted program: dedup -> unique gather -> fwd/bwd ->
+        rowwise Adam + dense Adam. The step's outputs REPLACE the view's and
+        the session's state buffers immediately (never touch the donated
+        inputs again)."""
+        view = self.engine.device_view(put=self._put_replicated)
+        feat_table = tuple(sorted(
+            (f, self.engine.table_of(f)) for f in rows
+        ))
+        tables = tuple(dict.fromkeys(t for _, t in feat_table))
+        slots = {
+            t: sum(rows[f].size for f, tt in feat_table if tt == t)
+            for t in tables
+        }
+        # The engine's OWN config governs the window (a pre-built engine may
+        # carry a different accum_batches than SessionConfig.engine).
+        window = max(1, self.engine.cfg.accum_batches)
+        use_accum = window > 1
+        if use_accum:
+            for t in tables:
+                view.ensure_accum(t, slots[t], view.emb[t].shape[1], window)
+            apply_now = view.window_count + 1 >= window
+        else:
+            apply_now = True
+        # The window end is GLOBAL (the host oracle's flush drains every
+        # table): tables with pending gradients that this batch's features
+        # don't touch must drain too. Unreachable with the default GRM
+        # features (one merged table hosts them all), but any multi-table
+        # feature set can close a window on a batch missing a table.
+        drain_tables = tuple(
+            t for t in view.tables
+            if t not in tables and view.acc_used.get(t, 0)
+        ) if (use_accum and apply_now) else ()
+        all_tables = tables + drain_tables
+
+        args = [
+            self.dense_params,
+            self.dense_opt_state,
+            {t: view.emb[t] for t in all_tables},
+            {t: view.opt[t] for t in all_tables},
+            {t: view.acc[t] for t in all_tables} if use_accum else {},
+            {f: self._put_batch(r) for f, r in rows.items()},
+            self._put_batch(stacked["labels"]),
+            self._put_batch(stacked["mask"]),
+        ]
+        if self.packed:
+            args += [
+                self._put_batch(stacked["seq_ids"]),
+                self._put_batch(stacked["positions"]),
+            ]
+        (self.dense_params, self.dense_opt_state,
+         new_embs, new_moms, new_accs, loss, metrics) = \
+            self._fused_fn(feat_table, apply_now, drain_tables)(*args)
+        view.emb.update(new_embs)
+        view.opt.update(new_moms)
+        view.acc.update(new_accs)
+        if use_accum:
+            view.window_count = 0 if apply_now else view.window_count + 1
+            for t in tables:
+                view.acc_used[t] = (
+                    0 if apply_now else view.acc_used.get(t, 0) + slots[t]
+                )
+            for t in drain_tables:
+                view.acc_used[t] = 0
+        return loss, metrics
+
+    def _finish(self, rows, outputs) -> Dict[str, jax.Array]:
+        """Update-stream work. Fused mode already applied every update inside
+        the step; the host-driven oracle runs the engine sparse path + dense
+        Adam here. Either way the returned metrics are ASYNC device scalars —
+        no blocking float() in the step path (it would forfeit the §3
+        dispatch/compute overlap); convert lazily where they are consumed."""
+        if self.fused:
+            loss, metrics = outputs
+        else:
+            loss, metrics, dense_grads, emb_grads = outputs
+            self.engine.apply_grads(rows, emb_grads)
+            self.dense_params, self.dense_opt_state = self.dense_opt.update(
+                dense_grads, self.dense_opt_state, self.dense_params
+            )
+        self.step_count += 1
+        return {**metrics, "loss": loss}
+
+    def train_step(self, batches) -> Dict[str, jax.Array]:
         """One unpipelined step. `batches` is one batch dict (single device)
         or a sequence of per-device batch dicts (ragged shapes fine)."""
         stacked = self._stack(batches)
         rows = self._sparse_phase(stacked)
         return self._finish(rows, self._dispatch(stacked, rows))
 
-    def train_stream(self, batch_stream: Iterable) -> Iterator[Dict[str, float]]:
+    def train_stream(self, batch_stream: Iterable) -> Iterator[Dict[str, jax.Array]]:
         """Pipelined training (§3): while the devices run the dense fwd+bwd
         of batch T (async jax dispatch), the host runs the sparse dispatch
         phase of batch T+1 — the copy/dispatch/compute overlap of the
@@ -326,16 +469,18 @@ class TrainSession:
         paths: Sequence[str],
         steps: Optional[int] = None,
         on_step=None,
-    ) -> List[Dict[str, float]]:
+    ) -> List[Dict[str, jax.Array]]:
         """The full loop: pipelines -> (pipelined) steps -> cadenced eviction
         and elastic checkpoints. Returns the per-step metrics.
 
         Eviction compacts table rows, which invalidates the row handles the
         pipelined stream pre-resolved for the NEXT batch — so with an
-        eviction cadence the loop runs unpipelined steps instead.
+        eviction cadence the loop runs unpipelined steps instead. (Under
+        `fused_update` eviction also commits the device view; the next step
+        re-borrows the compacted tables.)
         """
         c = self.cfg
-        history: List[Dict[str, float]] = []
+        history: List[Dict[str, jax.Array]] = []
 
         def bounded(it):
             for i, b in enumerate(it):
@@ -374,7 +519,7 @@ class TrainSession:
         assert d, "no ckpt_dir configured or passed"
         C.save_dense(d, step, {"params": self.dense_params,
                                "opt": self.dense_opt_state})
-        self.engine.save(d, step)
+        self.engine.save(d, step)  # commits the device view first
         return d
 
     def restore(self, ckpt_dir: str, step: int) -> None:
@@ -382,8 +527,11 @@ class TrainSession:
             lambda: {"params": self.dense_params, "opt": self.dense_opt_state}
         )
         loaded = C.load_dense(ckpt_dir, step, proto)
-        self.dense_params = loaded["params"]
-        self.dense_opt_state = loaded["opt"]
+        # Re-place the dense state (fused mode keeps it device-resident);
+        # engine.load drops any live device view — the restored host state
+        # is authoritative and the next step re-borrows it.
+        self.dense_params = self._put_replicated(loaded["params"])
+        self.dense_opt_state = self._put_replicated(loaded["opt"])
         self.engine.load(ckpt_dir, step)
         self.step_count = step
 
@@ -393,17 +541,17 @@ class TrainSession:
 # ---------------------------------------------------------------------------
 
 
-def _session_step(dense_params, embs, rows, labels, mask, seq_ids=None,
-                  positions=None, *, cfg: ModelConfig, sync: str):
-    """Jitted: gather every feature -> per-device dense forward -> synced
-    loss -> (dense grads, per-slot embedding grads for every feature).
+def _weighted_loss(dense_params, gathered, rows, labels, mask, stream, *,
+                   cfg: ModelConfig, sync: str):
+    """Shared loss body of both step variants: per-device dense forward over
+    pre-gathered embeddings -> synced loss.
 
     Every batch array carries a leading device axis D; the per-device body
     (vmapped) is exactly the single-device GRM step of grm_trainer history:
     `item` is the positional action sequence, every other feature is the
-    contextual sub-sequence, mean-pooled and broadcast to positions. With
-    `seq_ids`/`positions` the per-device batch is one (T,) jagged stream
-    (pack_batch layout) instead of a (B, S) rectangle.
+    contextual sub-sequence, mean-pooled and broadcast to positions. With a
+    non-empty `stream` (= (seq_ids, positions)) the per-device batch is one
+    (T,) jagged stream (pack_batch layout) instead of a (B, S) rectangle.
 
     Sync (§5.1): per-device *summed* loss and weight reduce globally —
     `weighted` (and single-device `none`) form Σ loss / Σ weight, whose
@@ -411,12 +559,57 @@ def _session_step(dense_params, embs, rows, labels, mask, seq_ids=None,
     paper; `unweighted` forms mean_d(loss_d / weight_d), the biased plain
     mean baseline. Under a mesh with the batch sharded over the data axis,
     GSPMD lowers the global sums to the actual cross-device reductions.
+    """
+    packed = bool(stream)
+
+    def device_loss_sums(g_d, rows_d, labels_d, mask_d, stream_d):
+        """Local summed loss + weight for ONE device's batch slice."""
+        x = g_d["item"]  # (B, S, d) padded | (T, d) packed
+        for f, gv in g_d.items():
+            if f == "item":
+                continue
+            fvalid = (rows_d[f] >= 0).astype(jnp.float32)[..., None]
+            ctx = jnp.sum(gv * fvalid, axis=-2) / jnp.maximum(
+                jnp.sum(fvalid, axis=-2), 1.0
+            )  # per-sequence contextual pooling
+            if packed:
+                seg = jnp.minimum(stream_d[0], ctx.shape[0] - 1)  # pad clamp
+                x = x + ctx[seg]
+            else:
+                x = x + ctx[:, None, :]
+        if packed:
+            logits = grm_apply_packed(dense_params, x, stream_d[0],
+                                      stream_d[1], mask_d, cfg)
+        else:
+            logits = grm_apply(dense_params, x, mask_d, cfg)
+        loss_sum, m = grm_loss(logits, labels_d, mask_d)
+        return loss_sum, m["weight"]
+
+    sums, weights = jax.vmap(device_loss_sums)(
+        gathered, rows, labels, mask, stream
+    )
+    total_sum = jnp.sum(sums)
+    total_w = jnp.sum(weights)
+    if sync == "unweighted":
+        loss = jnp.mean(sums / jnp.maximum(weights, 1.0))
+    else:  # weighted | none (identical on one device)
+        loss = total_sum / jnp.maximum(total_w, 1.0)
+    return loss, {"loss_sum": total_sum, "weight": total_w}
+
+
+def _session_step(dense_params, embs, rows, labels, mask, seq_ids=None,
+                  positions=None, *, cfg: ModelConfig, sync: str):
+    """Host-driven oracle step: gather every feature -> shared loss body ->
+    (dense grads, per-slot embedding grads for every feature).
 
     The embedding gradient is computed w.r.t. the gathered vectors —
     O(batch), never O(table) — and returned with the device axis intact so
-    the engine's sparse path sums duplicates across devices.
+    the engine's sparse path sums duplicates across devices. The caller
+    (TrainSession._finish with fused_update=False) applies both optimizers
+    on the host side.
     """
     packed = seq_ids is not None
+    stream = (seq_ids, positions) if packed else ()
 
     gathered = {}
     for f, emb_table in embs.items():
@@ -427,40 +620,8 @@ def _session_step(dense_params, embs, rows, labels, mask, seq_ids=None,
         ).astype(jnp.float32)
 
     def loss_fn(dp, g):
-        def device_loss_sums(g_d, rows_d, labels_d, mask_d, stream_d):
-            """Local summed loss + weight for ONE device's batch slice."""
-            x = g_d["item"]  # (B, S, d) padded | (T, d) packed
-            for f, gv in g_d.items():
-                if f == "item":
-                    continue
-                fvalid = (rows_d[f] >= 0).astype(jnp.float32)[..., None]
-                ctx = jnp.sum(gv * fvalid, axis=-2) / jnp.maximum(
-                    jnp.sum(fvalid, axis=-2), 1.0
-                )  # per-sequence contextual pooling
-                if packed:
-                    seg = jnp.minimum(stream_d[0], ctx.shape[0] - 1)  # pad clamp
-                    x = x + ctx[seg]
-                else:
-                    x = x + ctx[:, None, :]
-            if packed:
-                logits = grm_apply_packed(dp, x, stream_d[0], stream_d[1],
-                                          mask_d, cfg)
-            else:
-                logits = grm_apply(dp, x, mask_d, cfg)
-            loss_sum, m = grm_loss(logits, labels_d, mask_d)
-            return loss_sum, m["weight"]
-
-        stream = (seq_ids, positions) if packed else ()
-        sums, weights = jax.vmap(device_loss_sums)(
-            g, rows, labels, mask, stream
-        )
-        total_sum = jnp.sum(sums)
-        total_w = jnp.sum(weights)
-        if sync == "unweighted":
-            loss = jnp.mean(sums / jnp.maximum(weights, 1.0))
-        else:  # weighted | none (identical on one device)
-            loss = total_sum / jnp.maximum(total_w, 1.0)
-        return loss, {"loss_sum": total_sum, "weight": total_w}
+        return _weighted_loss(dp, g, rows, labels, mask, stream,
+                              cfg=cfg, sync=sync)
 
     (loss, m), (dgrads, egrads) = jax.value_and_grad(
         loss_fn, argnums=(0, 1), has_aux=True
@@ -471,6 +632,111 @@ def _session_step(dense_params, embs, rows, labels, mask, seq_ids=None,
         "grad_norm": global_norm(dgrads),
     }
     return loss, metrics, dgrads, egrads
+
+
+def _session_step_fused(dense_params, dense_opt_state, embs, moms, accs,
+                        rows, labels, mask, seq_ids=None, positions=None, *,
+                        cfg: ModelConfig, sync: str, dense_opt: Adam,
+                        sparse_opt: RowwiseAdam,
+                        feat_table: Tuple[Tuple[str, str], ...],
+                        apply_now: bool,
+                        drain_tables: Tuple[str, ...] = ()):
+    """The fused device-resident step — ONE jitted program, state in/out.
+
+    `embs`/`moms` (and, for `accum_batches > 1`, the `accs` accumulation
+    window) are the borrowed per-table device buffers, passed as DONATED
+    arguments and returned updated; `feat_table` is the static feature ->
+    merged-table map; `apply_now` marks the end of the accumulation window;
+    `drain_tables` names tables absent from this batch whose pending window
+    must drain anyway (the window end is global).
+
+    Data flow (§4.3 dedup + §5.2 sparse update, entirely in-jit):
+
+      1. dedup: per merged table, the row handles of every feature and every
+         device dedup together (`unique_static` — sorted unique + inverse);
+      2. gather: ONE unique-row gather per table; per-feature per-slot
+         vectors are reconstructed through the inverse index;
+      3. fwd/bwd: the shared loss body; because step 2's reconstruction is a
+         gather from the unique rows, its autodiff transpose scatter-adds
+         the per-slot gradients — gradients arrive PRE-SUMMED per unique row
+         (across duplicate IDs, features sharing the table, and devices);
+      4. update: rowwise Adam touches exactly the unique rows with one
+         scatter (or accumulates into the device-resident window and applies
+         at `apply_now`); dense Adam updates in the same program.
+
+    Nothing O(table) ever crosses the host boundary; the only per-step
+    inputs are the batch and its O(batch) handles.
+    """
+    packed = seq_ids is not None
+    stream = (seq_ids, positions) if packed else ()
+    tables = tuple(dict.fromkeys(t for _, t in feat_table))
+    feats_of = {t: tuple(f for f, tt in feat_table if tt == t)
+                for t in tables}
+
+    uniq = {}
+    for t in tables:
+        flat = jnp.concatenate(
+            [rows[f].reshape(-1).astype(jnp.int32) for f in feats_of[t]]
+        )
+        uniq[t] = dedup.unique_static(flat, flat.shape[0])
+
+    unique_emb = {}
+    for t in tables:
+        ids = uniq[t].ids
+        valid = ids >= 0
+        unique_emb[t] = jnp.where(
+            valid[:, None], embs[t][jnp.where(valid, ids, 0)], 0.0
+        ).astype(jnp.float32)
+
+    def loss_fn(dp, ue):
+        gathered = {}
+        for t in tables:
+            per_slot = ue[t][uniq[t].inverse]  # (Σ_f |rows_f|, d)
+            ofs = 0
+            for f in feats_of[t]:
+                r = rows[f]
+                g = per_slot[ofs:ofs + r.size].reshape(
+                    r.shape + per_slot.shape[-1:]
+                )
+                gathered[f] = jnp.where((r >= 0)[..., None], g, 0.0)
+                ofs += r.size
+        return _weighted_loss(dp, gathered, rows, labels, mask, stream,
+                              cfg=cfg, sync=sync)
+
+    (loss, m), (dgrads, ugrads) = jax.value_and_grad(
+        loss_fn, argnums=(0, 1), has_aux=True
+    )(dense_params, unique_emb)
+
+    new_embs, new_moms, new_accs = {}, {}, {}
+    for t in tables:
+        u, g = uniq[t], ugrads[t]
+        if accs:  # §5.2 accumulation window, device-resident
+            acc = ga.accumulate(accs[t], u.ids, g)
+            if apply_now:
+                uq, summed, acc = ga.drain(acc, acc.rows.shape[0])
+                e, s = sparse_opt.update(embs[t], moms[t], uq, summed)
+            else:
+                e, s = embs[t], moms[t]  # pass through (donated alias)
+            new_accs[t] = acc
+        else:
+            e, s = sparse_opt.update(embs[t], moms[t], u.ids, g)
+        new_embs[t], new_moms[t] = e, s
+
+    for t in drain_tables:  # window closing; no rows for t in this batch
+        uq, summed, acc = ga.drain(accs[t], accs[t].rows.shape[0])
+        e, s = sparse_opt.update(embs[t], moms[t], uq, summed)
+        new_embs[t], new_moms[t], new_accs[t] = e, s, acc
+
+    new_params, new_opt_state = dense_opt.update(
+        dgrads, dense_opt_state, dense_params
+    )
+    metrics = {
+        "loss_sum": m["loss_sum"],
+        "weight": m["weight"],
+        "grad_norm": global_norm(dgrads),
+    }
+    return (new_params, new_opt_state, new_embs, new_moms, new_accs,
+            loss, metrics)
 
 
 def default_grm_features(embed_dim: int) -> Tuple[FeatureConfig, ...]:

@@ -8,6 +8,10 @@ The acceptance matrix for the unified session API:
     device — to fp32 tolerance, in BOTH layouts (padded rectangles and
     packed jagged streams), through several full steps so sparse AND dense
     updates agree (divergent grads would compound);
+  * the FUSED device-resident step (in-jit dedup -> unique gather ->
+    rowwise Adam over donated tables, the default) must match the
+    host-driven update oracle (`fused_update=False`) on the SAME 4-device
+    mesh, per-step metrics and final dense params + embedding tables;
   * weighted vs unweighted sync must measurably diverge on imbalanced
     per-device batches (i.e. the paper's §5.1 fix matters).
 
@@ -33,7 +37,8 @@ NDEV = 4
 STEPS = 3
 
 
-def make_session(num_devices: int, layout: str, sync: str) -> TrainSession:
+def make_session(num_devices: int, layout: str, sync: str,
+                 fused: bool = True) -> TrainSession:
     return TrainSession(SessionConfig(
         model=ARCHS["grm-4g"].reduced(),
         engine=EngineConfig(backend="local-dynamic", capacity=1 << 12,
@@ -41,6 +46,7 @@ def make_session(num_devices: int, layout: str, sync: str) -> TrainSession:
         num_devices=num_devices,
         layout=layout,
         sync=sync,
+        fused_update=fused,
         dense_lr=3e-3,
         sparse_lr=5e-2,
     ))
@@ -78,20 +84,27 @@ def max_param_delta(a, b) -> float:
 
 
 def check_layout(layout: str) -> None:
-    multi = make_session(NDEV, layout, "weighted")
+    multi = make_session(NDEV, layout, "weighted")  # fused (the default)
+    hostd = make_session(NDEV, layout, "weighted", fused=False)
     single = make_session(1, layout, "weighted")
     assert multi.mesh is not None and multi.mesh.devices.size == NDEV
+    assert multi.fused and not hostd.fused
 
     for step in range(STEPS):
         dev_batches, oracle_batch = materialize(device_chunks(step), layout)
         mm = multi.train_step(dev_batches)
+        mh = hostd.train_step(dev_batches)
         mo = single.train_step(oracle_batch)
         assert mm["weight"] == mo["weight"], (mm["weight"], mo["weight"])
+        assert mm["weight"] == mh["weight"], (mm["weight"], mh["weight"])
         np.testing.assert_allclose(mm["loss"], mo["loss"], rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(mm["loss"], mh["loss"], rtol=2e-5, atol=2e-5)
         np.testing.assert_allclose(mm["loss_sum"], mo["loss_sum"], rtol=2e-5)
+        np.testing.assert_allclose(mm["loss_sum"], mh["loss_sum"], rtol=2e-5)
         np.testing.assert_allclose(mm["grad_norm"], mo["grad_norm"], rtol=2e-4)
-        print(f"  [{layout}] step {step}: loss {mm['loss']:.6f} "
-              f"(oracle {mo['loss']:.6f}, weight {int(mm['weight'])})")
+        print(f"  [{layout}] step {step}: loss {float(mm['loss']):.6f} "
+              f"(host-driven {float(mh['loss']):.6f}, "
+              f"oracle {float(mo['loss']):.6f}, weight {int(mm['weight'])})")
 
     # fp32-tolerance bound: Adam turns ε-scale gradient differences into
     # up-to-lr-scale parameter differences (same bound as the grad-accum
@@ -102,8 +115,17 @@ def check_layout(layout: str) -> None:
         np.asarray(multi.engine.emb_of("item"))
         - np.asarray(single.engine.emb_of("item")))))
     assert emb_err < 1e-4, f"{layout}: embedding tables diverged: {emb_err}"
+    # fused vs host-driven on the SAME mesh: the in-jit sparse update must
+    # land on the same tables and dense params as the engine's host path.
+    ferr = max_param_delta(multi.dense_params, hostd.dense_params)
+    femb = float(np.max(np.abs(
+        np.asarray(multi.engine.emb_of("item"))
+        - np.asarray(hostd.engine.emb_of("item")))))
+    assert ferr < 0.2 * 3e-3 * STEPS, f"{layout}: fused vs host params: {ferr}"
+    assert femb < 1e-4, f"{layout}: fused vs host tables: {femb}"
     print(f"  [{layout}] {STEPS}-step parity OK "
-          f"(params Δ={err:.2e}, emb Δ={emb_err:.2e})")
+          f"(params Δ={err:.2e}, emb Δ={emb_err:.2e}; "
+          f"fused-vs-host params Δ={ferr:.2e}, emb Δ={femb:.2e})")
 
 
 def check_sync_modes_diverge() -> None:

@@ -241,3 +241,84 @@ def test_engine_save_load_roundtrip(backend):
             assert int(a.step) == int(b.step)
             np.testing.assert_array_equal(np.asarray(a.mu), np.asarray(b.mu))
             np.testing.assert_array_equal(np.asarray(a.nu), np.asarray(b.nu))
+
+
+# ---------------------------------------------------------------------------
+# Accumulation-window integrity (apply_grads under growing batch widths)
+# ---------------------------------------------------------------------------
+
+
+def test_apply_grads_growing_batches_keep_pending_grads():
+    """Regression: under accum_batches > 1, a wider batch mid-window used to
+    REALLOCATE the live accumulator (capacity < needed while used + new
+    still fit) and silently drop the gradients already accumulated. The
+    accumulator now grows in place (`grad_accum.grow`); a ragged window and
+    the same window padded to uniform width must produce identical tables."""
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(rng.integers(0, 10**9, (8,)).astype(np.int64))
+    # cap = 4*3 = 12 after batch 0; batch 1 makes needed = 18 > 12 while
+    # used + 6 = 10 <= 12 — exactly the old silent-drop branch.
+    widths = [4, 6, 5]
+    ragged = _local_engine(accum=3)
+    padded = _local_engine(accum=3)
+    hr = ragged.insert({"item": ids})["item"]
+    hp = padded.insert({"item": ids})["item"]
+    np.testing.assert_array_equal(np.asarray(hr), np.asarray(hp))
+    wmax = max(widths)
+    for i, w in enumerate(widths):
+        grng = np.random.default_rng(10 + i)
+        sel = jnp.asarray(grng.integers(0, ids.shape[0], (w,)))
+        g = jnp.asarray(grng.normal(0, 1, (w, 16)).astype(np.float32))
+        ragged.apply_grads({"item": hr[sel]}, {"item": g})
+        rp = jnp.full((wmax,), -1, jnp.int32).at[:w].set(hr[sel])
+        gp = jnp.zeros((wmax, 16), jnp.float32).at[:w].set(g)
+        padded.apply_grads({"item": rp}, {"item": gp})
+    # window complete -> both applied; every pending gradient must survive
+    np.testing.assert_allclose(np.asarray(ragged.emb_of("item")),
+                               np.asarray(padded.emb_of("item")),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident view (borrow / commit / growth migration)
+# ---------------------------------------------------------------------------
+
+
+def test_device_view_borrow_commit_and_growth():
+    """The borrow/commit state machine: reads go through the live view,
+    chunk expansion migrates it in place (O(new rows)), and flush commits
+    the device buffers back to the backend."""
+    eng = _local_engine(chunk_rows=128)
+    h = eng.insert({"item": jnp.asarray([11, 22, 33], jnp.int64)})["item"]
+    table = eng.table_of("item")
+    before = np.asarray(eng.emb_of("item"))[np.asarray(h)]
+
+    view = eng.device_view()
+    assert eng.has_device_view()
+    assert eng.device_view() is view  # idempotent while live
+    cap0 = view.row_capacity(table)
+    # the borrow is a copy: training on the view never aliases host state
+    assert view.emb[table] is not eng.backend.table_emb(table)
+
+    # mutate the borrowed buffer as the fused step would
+    view.emb[table] = view.emb[table].at[np.asarray(h)].add(1.0)
+    after = np.asarray(eng.emb_of("item"))[np.asarray(h)]  # reads the view
+    np.testing.assert_allclose(after, before + 1.0, rtol=1e-6)
+    # ...while the backend still holds the stale (pre-borrow) rows
+    stale = np.asarray(eng.backend.table_emb(table))[np.asarray(h)]
+    np.testing.assert_allclose(stale, before, rtol=1e-6)
+
+    # growth: enough fresh IDs to break the spare-chunk invariant
+    many = jnp.asarray(np.arange(10**6, 10**6 + 300), jnp.int64)
+    h2 = eng.insert({"item": many})["item"]
+    assert (np.asarray(h2) >= 0).all()
+    assert view.row_capacity(table) == eng.backend.row_capacity(table) > cap0
+    # the mutated rows survived the in-place migration
+    np.testing.assert_allclose(
+        np.asarray(eng.emb_of("item"))[np.asarray(h)], before + 1.0, rtol=1e-6)
+
+    eng.flush()  # commit boundary
+    assert not eng.has_device_view()
+    np.testing.assert_allclose(
+        np.asarray(eng.backend.table_emb(table))[np.asarray(h)],
+        before + 1.0, rtol=1e-6)

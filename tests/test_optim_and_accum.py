@@ -76,6 +76,53 @@ def test_rowwise_adam_touches_only_given_rows():
     assert float(st2.mu[2]) != 0.0 and float(st2.mu[0]) == 0.0
 
 
+def test_rowwise_adam_dedup_update_matches_accum_drain():
+    """`dedup_update` (the one-shot in-jit form) must equal the
+    accumulate -> drain -> update pipeline on raw duplicated (row, grad)
+    pairs — same table, same moments — including -1 padding."""
+    opt = RowwiseAdam(lr=0.1)
+    rng = np.random.default_rng(4)
+    emb = jnp.asarray(rng.normal(0, 0.1, (12, 4)), jnp.float32)
+    rows = jnp.asarray([3, 7, 3, -1, 9, 7, 3], jnp.int32)
+    grads = jnp.asarray(rng.normal(size=(7, 4)), jnp.float32)
+
+    e1, s1 = jax.jit(opt.dedup_update)(emb, opt.init(12), rows, grads)
+
+    acc = ga.accumulate(ga.init_accumulator(7, 4), rows, grads)
+    uniq, summed, _ = ga.drain(acc, 7)
+    e2, s2 = opt.update(emb, opt.init(12), uniq, summed)
+
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1.mu), np.asarray(s2.mu),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1.nu), np.asarray(s2.nu),
+                               rtol=1e-6, atol=1e-6)
+    assert int(s1.step) == int(s2.step) == 1
+
+
+def test_grad_accum_grow_preserves_pending():
+    """`ga.grow` widens the window in place: entries and fill survive, new
+    slots are free, and a drain after growth equals a drain of an
+    accumulator that was big enough from the start."""
+    rng = np.random.default_rng(1)
+    r1 = jnp.asarray([2, 5, 2, -1], jnp.int32)
+    g1 = jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)
+    r2 = jnp.asarray([5, 1, 8, 2, 1, 8], jnp.int32)
+    g2 = jnp.asarray(rng.normal(size=(6, 3)), jnp.float32)
+
+    small = ga.accumulate(ga.init_accumulator(4, 3), r1, g1)
+    grown = ga.accumulate(ga.grow(small, 10), r2, g2)
+    big = ga.accumulate(ga.accumulate(ga.init_accumulator(10, 3), r1, g1),
+                        r2, g2)
+    assert int(grown.fill) == int(big.fill)
+    u1, s1, _ = ga.drain(grown, 10)
+    u2, s2, _ = ga.drain(big, 10)
+    np.testing.assert_array_equal(np.asarray(u1), np.asarray(u2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-6, atol=1e-6)
+
+
 def test_rowwise_adam_descends():
     opt = RowwiseAdam(lr=0.05)
     target = jnp.asarray(np.random.default_rng(0).normal(size=(6, 8)), jnp.float32)

@@ -2,11 +2,15 @@
 
 In-process tests cover the single-device API surface (config validation,
 device-batch stacking, layout parity with the GRMTrainer shim, run()
-cadences, checkpoint round-trip, pipeline shutdown). The multi-device
-acceptance matrix — 4-device weighted sync vs the single-device oracle in
-both layouts, weighted ≠ unweighted on imbalanced batches — runs in a
-subprocess that forces 4 host devices before importing jax
-(tests/dist_scripts/check_session_multidev.py; see conftest note).
+cadences, checkpoint round-trip, pipeline shutdown) and the fused
+device-resident step (parity with the host-driven oracle over multi-step
+ragged batches in both layouts, accumulation windows, donation safety,
+eviction-cadence view rebuilds, async metrics). The multi-device acceptance
+matrix — 4-device weighted sync vs the single-device oracle in both layouts,
+fused vs host-driven on the same 4-device mesh, weighted ≠ unweighted on
+imbalanced batches — runs in a subprocess that forces 4 host devices before
+importing jax (tests/dist_scripts/check_session_multidev.py; see conftest
+note).
 """
 import os
 import subprocess
@@ -15,6 +19,7 @@ import tempfile
 import threading
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -223,14 +228,175 @@ def test_session_run_closes_pipelines_on_early_stop():
 
 
 # ---------------------------------------------------------------------------
+# Fused device-resident step (tentpole): parity, donation, boundaries
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("layout", ["padded", "packed"])
+def test_session_fused_matches_host_oracle(layout):
+    """The fused in-jit dedup -> unique gather -> rowwise-Adam step must
+    reproduce the host-driven oracle (`fused_update=False`) to fp32
+    tolerance over multi-step ragged batches — losses each step AND the
+    final dense params + embedding tables (divergent updates compound)."""
+    fused = TrainSession(_cfg(layout=layout))
+    oracle = TrainSession(_cfg(layout=layout, fused_update=False))
+    assert fused.fused and not oracle.fused
+    for b in _batches(4, layout):
+        mf, mo = fused.train_step(b), oracle.train_step(b)
+        assert float(mf["weight"]) == float(mo["weight"])
+        np.testing.assert_allclose(float(mf["loss"]), float(mo["loss"]),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(float(mf["loss_sum"]),
+                                   float(mo["loss_sum"]), rtol=2e-5)
+    perr = jax.tree.reduce(max, jax.tree.map(
+        lambda a, b: float(np.max(np.abs(np.asarray(a, np.float32)
+                                         - np.asarray(b, np.float32)))),
+        fused.dense_params, oracle.dense_params))
+    assert perr < 1e-4, f"dense params diverged: {perr}"
+    emb_err = float(np.max(np.abs(
+        np.asarray(fused.engine.emb_of("item"))
+        - np.asarray(oracle.engine.emb_of("item")))))
+    assert emb_err < 1e-4, f"embedding tables diverged: {emb_err}"
+
+
+def test_session_fused_accum_window_matches_host_oracle():
+    """accum_batches > 1: the fused step accumulates into device-resident
+    buffers and applies at the window end — same trajectory as the engine's
+    host-side window, including mid-window batch-width growth (which used to
+    hit the apply_grads realloc bug)."""
+    eng = lambda: EngineConfig(backend="local-dynamic", capacity=1 << 12,
+                               chunk_rows=512, accum_batches=3)
+    fused = TrainSession(_cfg(engine=eng()))
+    oracle = TrainSession(_cfg(engine=eng(), fused_update=False))
+    samples = _samples(44, seed=3)
+    from repro.data.sequence_balancing import pad_batch as _pad
+    # deliberately growing batch sizes inside one accumulation window
+    sizes, ofs = [4, 9, 6, 12, 5, 8], 0
+    for n in sizes:
+        b = _pad(samples[ofs:ofs + n], 0, bucket=32)
+        ofs += n
+        mf, mo = fused.train_step(b), oracle.train_step(b)
+        np.testing.assert_allclose(float(mf["loss"]), float(mo["loss"]),
+                                   rtol=2e-5, atol=2e-5)
+    emb_err = float(np.max(np.abs(
+        np.asarray(fused.engine.emb_of("item"))
+        - np.asarray(oracle.engine.emb_of("item")))))
+    assert emb_err < 1e-4, f"accum window diverged: {emb_err}"
+
+
+def test_session_fused_midwindow_boundary_applies_pending():
+    """Regression (review finding): a host-facing boundary (here: an eval
+    `lookup`) INSIDE a fused accumulation window must apply the pending
+    window gradients, not park them where a later commit would overwrite
+    them. Applying-at-every-boundary makes the interleaved accum=3 run
+    identical to an accum=1 run (each batch's gradients applied exactly
+    once, in order)."""
+    mk = lambda accum: _cfg(engine=EngineConfig(
+        backend="local-dynamic", capacity=1 << 12, chunk_rows=512,
+        accum_batches=accum))
+    interleaved = TrainSession(mk(3))
+    reference = TrainSession(mk(1))
+    b1, b2 = _batches(2, "padded")
+    m1a = interleaved.train_step(b1)  # window 1/3: accumulated, not applied
+    m1b = reference.train_step(b1)  # applied in-step
+    # the boundary: an eval lookup mid-window flushes (applies) the window
+    probe = {"item": jnp.asarray([[1, 2, 3]], jnp.int64)}
+    interleaved.engine.lookup(probe, assume_inserted=True)
+    assert not interleaved.engine.has_device_view()
+    m2a = interleaved.train_step(b2)  # fresh window
+    m2b = reference.train_step(b2)
+    interleaved.engine.flush()
+    np.testing.assert_allclose(float(m1a["loss"]), float(m1b["loss"]),
+                               rtol=1e-6)
+    # b2's loss sees b1's updates in BOTH sessions -> tables were applied,
+    # not dropped, at the mid-window boundary
+    np.testing.assert_allclose(float(m2a["loss"]), float(m2b["loss"]),
+                               rtol=2e-5, atol=2e-5)
+    emb_err = float(np.max(np.abs(
+        np.asarray(interleaved.engine.emb_of("item"))
+        - np.asarray(reference.engine.emb_of("item")))))
+    assert emb_err < 1e-5, f"mid-window boundary lost gradients: {emb_err}"
+
+
+def test_session_fused_donation_safety():
+    """No use-after-donate: once a step consumed the device-resident state,
+    the session must never read the previous buffers again. Simulate
+    donation on every backend by deleting the pre-step buffers and checking
+    the next step + every commit boundary still work."""
+    sess = TrainSession(_cfg())
+    b1, b2, b3 = _batches(3, "padded")
+    sess.train_step(b1)
+    view = sess.engine.device_view()
+    old = (list(view.emb.values())
+           + list(jax.tree.leaves(dict(view.opt)))
+           + jax.tree.leaves(sess.dense_params)
+           + jax.tree.leaves(sess.dense_opt_state))
+    sess.train_step(b2)  # conceptually donates `old`
+    fresh = set(id(x) for x in
+                list(view.emb.values()) + jax.tree.leaves(sess.dense_params))
+    for arr in old:
+        if id(arr) not in fresh:  # pass-through aliases stay live
+            arr.delete()
+    m = sess.train_step(b3)  # must not touch deleted buffers
+    assert np.isfinite(float(m["loss"]))
+    sess.engine.flush()  # commit boundary reads only the live view
+    assert np.isfinite(float(np.max(np.asarray(sess.engine.emb_of("item")))))
+
+
+def test_session_fused_eviction_rebuilds_view():
+    """Eviction is a materialization boundary: it commits the device view
+    (host tables become authoritative), compacts rows, and the next step
+    re-resolves handles against a freshly borrowed view."""
+    sess = TrainSession(_cfg())
+    bs = _batches(4, "padded")
+    sess.train_step(bs[0])
+    sess.train_step(bs[1])
+    assert sess.engine.has_device_view()
+    evicted = sess.engine.evict(8, "lfu", step=2)
+    assert evicted > 0
+    assert not sess.engine.has_device_view()  # committed at the boundary
+    m = sess.train_step(bs[2])  # handles re-resolved post-compaction
+    assert np.isfinite(float(m["loss"]))
+    assert sess.engine.has_device_view()  # re-borrowed
+
+
+def test_session_fused_run_eviction_cadence():
+    """run() with an eviction cadence under the fused default: unpipelined
+    steps, commit/evict/re-borrow each cadence, finite losses throughout."""
+    scfg = synth.SynthConfig(num_users=40, num_items=400, avg_len=24,
+                             max_len=96, seed=5)
+    with tempfile.TemporaryDirectory() as d:
+        paths = synth.write_shards(scfg, d, 2, 48)
+        sess = TrainSession(_cfg(target_tokens=24 * 6, pad_bucket=32,
+                                 evict_every=2, evict_n=8))
+        hist = sess.run(paths, steps=4)
+        assert len(hist) == 4
+        assert all(np.isfinite(float(m["loss"])) for m in hist)
+
+
+def test_session_metrics_are_async_device_scalars():
+    """The per-step blocking float() sync is gone: metrics come back as
+    device scalars (lazy readback) in BOTH update modes."""
+    for fused in (True, False):
+        sess = TrainSession(_cfg(fused_update=fused))
+        (b,) = _batches(1, "padded")
+        m = sess.train_step(b)
+        for k in ("loss", "loss_sum", "weight", "grad_norm"):
+            assert isinstance(m[k], jax.Array), (k, type(m[k]))
+            assert np.isfinite(float(m[k]))  # still lazily convertible
+
+
+# ---------------------------------------------------------------------------
 # Multi-device acceptance (forced 4-device host mesh, subprocess)
 # ---------------------------------------------------------------------------
 
 
 def test_session_multidevice_parity_4dev():
     """Weighted-sync 4-device session over ragged per-device batches matches
-    the single-device oracle to fp32 tolerance in BOTH layouts, and weighted
-    vs unweighted sync diverge on imbalanced batches."""
+    the single-device oracle to fp32 tolerance in BOTH layouts, the fused
+    device-resident step matches the host-driven update oracle on the same
+    4-device mesh, and weighted vs unweighted sync diverge on imbalanced
+    batches."""
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     proc = subprocess.run(

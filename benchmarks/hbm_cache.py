@@ -1,0 +1,154 @@
+"""HBM embedding cache benchmark (ISSUE 6 artifact): train a table bigger
+than the device slot budget and measure what the frequency-aware cache
+costs and saves as the table/budget ratio and the access skew change.
+
+For each (ratio, zipf_a) pair a `local-cached` TrainSession is driven over
+synthetic padded batches whose item IDs are Zipf(a)-distributed over a
+prewarmed N-row table, with the device hot pool capped at N/ratio rows.
+Reported per row: sustained step wall time, cache hit rate, and swapped
+MB/step over the measured window. A `local-dynamic` whole-table row per
+skew is the oracle baseline (ratio 1, no swaps, the memory the cache
+avoids spending).
+
+The paper-shaped claims this reproduces at smoke scale:
+  * hit rate tracks skew, not table size — at fixed budget, more skew
+    (larger zipf_a) concentrates the working set into resident lines;
+  * swap traffic (MB/step) grows with the table/budget ratio under flat
+    access but stays near zero when the hot set fits;
+  * step-time overhead vs the whole-table oracle is the swap cost, which
+    the hit rate amortizes.
+
+Writes BENCH_hbm_cache.json (common.write_bench_json); registered in
+benchmarks/run.py as `hbm_cache`.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Table, write_bench_json
+from repro.configs.registry import ARCHS
+from repro.embedding import EngineConfig
+from repro.train.session import SessionConfig, TrainSession
+
+TABLE_ROWS = 4096       # prewarmed item-ID space (host truth rows ~ this)
+RATIOS = (1, 4, 16)     # table rows / device slot budget
+ZIPF_AS = (1.1, 1.5)    # access skew: near-flat long tail vs concentrated
+B, S = 4, 32            # batch geometry (<=128 unique rows per step)
+WARMUP, ITERS = 2, 8
+LINE_ROWS = 1           # row-granular lines: a scattered Zipf working set
+                        # must never exceed the slot count at ratio 16
+
+
+def _session(backend: str, budget_rows: int) -> TrainSession:
+    return TrainSession(SessionConfig(
+        model=ARCHS["grm-4g"].reduced(),
+        engine=EngineConfig(
+            backend=backend, capacity=2 * TABLE_ROWS, chunk_rows=1024,
+            accum_batches=1, cache_budget_rows=budget_rows,
+            cache_line_rows=LINE_ROWS,
+        ),
+        dense_lr=1e-3, sparse_lr=1e-2,
+    ))
+
+
+def _zipf_batches(a: float, n: int, seed: int):
+    """n padded batch dicts with Zipf(a) item IDs over [0, TABLE_ROWS)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        ids = (rng.zipf(a, size=(B, S)) - 1) % TABLE_ROWS
+        out.append({
+            "item_ids": ids.astype(np.int64),
+            "labels": rng.integers(0, 2, (B, S, 2)).astype(np.int8),
+            "mask": np.ones((B, S), bool),
+            "user_ids": rng.integers(0, 16, (B, 8)).astype(np.int64),
+            "tokens": np.int32(B * S),
+            "batch_size": np.int32(B),
+        })
+    return out
+
+
+def _prewarm(sess: TrainSession) -> int:
+    """Insert the whole ID space so the table is at scale before timing."""
+    import jax.numpy as jnp
+
+    sess.engine.insert({
+        "item": jnp.asarray(np.arange(TABLE_ROWS)[None, :]),
+        "user": jnp.asarray(np.arange(16)[None, :]),
+    })
+    return sum(sess.engine.table_sizes().values())
+
+
+def _measure(sess: TrainSession, batches) -> dict:
+    for b in batches[:WARMUP]:
+        float(sess.train_step(b)["loss"])
+    before = sess.engine.cache_stats() or {}
+    t0 = time.perf_counter()
+    for b in batches[WARMUP:]:
+        float(sess.train_step(b)["loss"])  # blocks the async dispatch
+    step_ms = (time.perf_counter() - t0) / ITERS * 1e3
+    after = sess.engine.cache_stats() or {}
+    hits = after.get("hits", 0) - before.get("hits", 0)
+    misses = after.get("misses", 0) - before.get("misses", 0)
+    swap_mb = (after.get("swap_bytes", 0)
+               - before.get("swap_bytes", 0)) / ITERS / 1e6
+    return {
+        "step_ms": round(step_ms, 2),
+        "hit_rate": round(hits / max(hits + misses, 1), 4),
+        "swap_mb_per_step": round(swap_mb, 4),
+    }
+
+
+def run() -> Table:
+    t = Table(
+        "hbm_cache",
+        ["backend", "ratio", "zipf_a", "table_rows", "budget_rows",
+         "step_ms", "hit_rate", "swap_mb_per_step"],
+    )
+    rows = []
+
+    def add(backend, ratio, a, budget, table_rows, m):
+        row = {"backend": backend, "ratio": ratio, "zipf_a": a,
+               "table_rows": table_rows, "budget_rows": budget, **m}
+        rows.append(row)
+        t.add(backend, ratio, a, table_rows, budget, m["step_ms"],
+              m["hit_rate"], m["swap_mb_per_step"])
+
+    for a in ZIPF_AS:
+        batches = _zipf_batches(a, WARMUP + ITERS, seed=int(a * 10))
+        # whole-table oracle: the memory spend the cache replaces
+        sess = _session("local-dynamic", budget_rows=TABLE_ROWS)
+        n = _prewarm(sess)
+        m = _measure(sess, batches)
+        add("local-dynamic", 1, a, TABLE_ROWS, n,
+            {**m, "hit_rate": 1.0, "swap_mb_per_step": 0.0})
+        for ratio in RATIOS:
+            budget = TABLE_ROWS // ratio
+            sess = _session("local-cached", budget_rows=budget)
+            n = _prewarm(sess)
+            add("local-cached", ratio, a, budget, n,
+                _measure(sess, batches))
+
+    write_bench_json("hbm_cache", {
+        "config": {
+            "table_rows": TABLE_ROWS, "ratios": list(RATIOS),
+            "zipf_as": list(ZIPF_AS), "batch": [B, S],
+            "line_rows": LINE_ROWS, "iters": ITERS,
+            "note": "CPU wall clock at smoke scale; the artifacts are "
+                    "hit rate vs skew at fixed budget, swap MB/step vs "
+                    "table/budget ratio, and the cached-vs-oracle step "
+                    "overhead those rates explain. Short windows mean "
+                    "compulsory first-touch misses dominate until the "
+                    "budget (not the window) binds — identical ratio-1 "
+                    "and ratio-4 rows are that effect, the ratio-16 "
+                    "drop under flat access is the capacity effect.",
+        },
+        "rows": rows,
+    })
+    return t
+
+
+if __name__ == "__main__":
+    print(run().render())

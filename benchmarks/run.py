@@ -15,8 +15,10 @@ Some benchmarks also write repo-root BENCH_<name>.json trajectory artifacts
 fig17_scalability -> BENCH_scalability.json (analytic model + measured
 multi-device TrainSession rows), fig14_seq_balancing ->
 BENCH_seq_balancing.json, fused_step -> BENCH_fused_step.json (device-
-resident fused step vs host-driven update, time + transfer volume). CI
-uploads them so multi-device numbers are recorded per commit.
+resident fused step vs host-driven update, time + transfer volume),
+hbm_cache -> BENCH_hbm_cache.json (frequency-aware HBM cache hit rate /
+swap traffic across table-to-budget ratios and Zipf skews). CI uploads
+them so multi-device numbers are recorded per commit.
 """
 from __future__ import annotations
 
@@ -39,6 +41,9 @@ BENCHMARKS = {
                          "Packed (jagged) vs padded GRM step"),
     "fused_step": ("benchmarks.fused_step",
                    "Fused device-resident vs host-driven session step"),
+    "hbm_cache": ("benchmarks.hbm_cache",
+                  "Frequency-aware HBM cache: hit rate / swap traffic / "
+                  "step time vs table-to-budget ratio and Zipf skew"),
     "roofline": ("benchmarks.roofline", "§Roofline all 40 pairs"),
 }
 

@@ -14,6 +14,13 @@ device-resident step removes (see benchmarks/fused_step.py): the host-driven
 update path re-places the full embedding table on device every step (one
 measured host->device put of a table-sized buffer), while the fused path
 keeps it borrowed across steps — 0 per-step table bytes.
+
+`cache_swap_ms` is the per-step line-swap cost the `local-cached` backend
+adds when the table exceeds the device slot budget (docs/hbm_cache.md): a
+measured evict readback + load put of a representative miss set (a batch-
+sized slice of rows + rowwise moments). 0 for whole-table systems; the
+extra `mtgrboost_hbm_cached` row shows the decomposition when HBM budget —
+not the algorithm — is the binding constraint.
 """
 from __future__ import annotations
 
@@ -61,11 +68,32 @@ def _sparse_state_h2d_ms(dim: int) -> float:
     return timeit(lambda: jax.device_put(host, dev), warmup=1, iters=5) * 1e3
 
 
+MISS_ROWS = B * S  # representative per-step miss set (every token misses)
+
+
+def _cache_swap_ms(dim: int) -> float:
+    """Measured worst-case per-step swap for the HBM-cached backend: read
+    back an evicted miss-set of rows + rowwise moments, put the replacement
+    lines. Real steps pay `miss_rate * this` (see BENCH_hbm_cache.json)."""
+    dev = jax.devices()[0]
+    emb = jax.device_put(np.zeros((MISS_ROWS, dim), np.float32), dev)
+    mu = jax.device_put(np.zeros((MISS_ROWS,), np.float32), dev)
+    host_emb = np.zeros((MISS_ROWS, dim), np.float32)
+    host_mu = np.zeros((MISS_ROWS,), np.float32)
+
+    def swap():
+        np.asarray(emb), np.asarray(mu), np.asarray(mu)  # evict readback
+        return (jax.device_put(host_emb, dev), jax.device_put(host_mu, dev),
+                jax.device_put(host_mu, dev))  # load put (emb, mu, nu)
+
+    return timeit(swap, warmup=1, iters=5) * 1e3
+
+
 def run() -> Table:
     t = Table(
         "fig12_time_decomposition",
         ["system", "lookup_ms", "forward_ms", "backward_ms",
-         "sparse_h2d_ms", "total_ms"],
+         "sparse_h2d_ms", "cache_swap_ms", "total_ms"],
     )
     cfg = ARCHS["grm-4g"].reduced()
     rng = np.random.default_rng(0)
@@ -92,10 +120,16 @@ def run() -> Table:
     bwd = jax.jit(jax.grad(loss_fn, argnums=(0, 1)))
     b_ms = timeit(lambda: bwd(params, emb), warmup=1, iters=5) * 1e3
 
+    swap_ms = _cache_swap_ms(cfg.d_model)  # HBM-cached row only
+
     t.add("mtgrboost", round(lk_opt, 2), round(f_ms, 2), round(b_ms, 2),
-          round(xfer_opt, 2), round(lk_opt + f_ms + b_ms + xfer_opt, 2))
+          round(xfer_opt, 2), 0.0,
+          round(lk_opt + f_ms + b_ms + xfer_opt, 2))
+    t.add("mtgrboost_hbm_cached", round(lk_opt, 2), round(f_ms, 2),
+          round(b_ms, 2), round(xfer_opt, 2), round(swap_ms, 2),
+          round(lk_opt + f_ms + b_ms + xfer_opt + swap_ms, 2))
     t.add("baseline_no_merge_no_dedup", round(lk_base, 2), round(f_ms, 2),
-          round(b_ms, 2), round(xfer_base, 2),
+          round(b_ms, 2), round(xfer_base, 2), 0.0,
           round(lk_base + f_ms + b_ms + xfer_base, 2))
     return t
 

@@ -12,7 +12,10 @@ periodic elastic checkpoints (engine shards + dense params). The whole loop
 is one `SessionConfig`:
 
   * `--backend local-static` trains against the TorchRec-style fixed table
-    the paper replaces — same session, one string.
+    the paper replaces — same session, one string. `--backend local-cached`
+    trains through the frequency-aware HBM cache (fixed device slot budget,
+    host-resident full table; docs/hbm_cache.md) — size it with
+    `--cache-budget-rows` / `--cache-line-rows`.
   * `--packed` switches batch materialization AND the dense fwd/bwd to the
     jagged single-stream layout (zero padding FLOPs; docs/packed_execution.md).
   * `--devices N --sync weighted` runs N-way data parallelism with §5.1
@@ -35,7 +38,16 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="full GRM-4G dims (~100M params incl. embeddings)")
     ap.add_argument("--backend", default="local-dynamic",
-                    choices=["local-dynamic", "local-static"])
+                    choices=["local-dynamic", "local-cached", "local-static"],
+                    help="embedding storage backend (sharded-* backends need "
+                         "the multi-host launcher, not this driver)")
+    ap.add_argument("--cache-budget-rows", type=int, default=0,
+                    help="local-cached: device hot-pool rows "
+                         "(default: capacity / 2)")
+    ap.add_argument("--cache-line-rows", type=int, default=1,
+                    help="local-cached: rows per cache line (swap "
+                         "granularity; hash-assigned rows have no ID "
+                         "locality, so 1 is the robust default)")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--workdir", default=None)
     ap.add_argument("--packed", action="store_true",
@@ -64,14 +76,17 @@ def main():
                                samples_per_shard=256 if args.full else 64)
     print(f"wrote {n_shards} shards to {data_dir}")
 
+    capacity = 1 << (16 if args.full else 12)
     session = TrainSession(SessionConfig(
         model=cfg,
         engine=EngineConfig(
             backend=args.backend,
-            capacity=1 << (16 if args.full else 12),
+            capacity=capacity,
             chunk_rows=4096 if args.full else 512,
             static_capacity=scfg.num_items,
             accum_batches=2,
+            cache_budget_rows=args.cache_budget_rows or capacity // 2,
+            cache_line_rows=args.cache_line_rows,
         ),
         num_devices=args.devices,
         layout="packed" if args.packed else "padded",

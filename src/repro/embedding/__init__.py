@@ -14,6 +14,7 @@ See docs/embedding_engine.md for the protocol and the migration table from
 the previous three APIs (HashTableCollection / sharded lookups / static).
 """
 from repro.embedding.base import BACKENDS, EngineConfig, FeatureConfig, LookupStats
+from repro.embedding.cache import CachedSparseView, LocalCachedBackend
 from repro.embedding.device_view import SparseDeviceView
 from repro.embedding.engine import EmbeddingEngine
 from repro.embedding.local_backends import LocalDynamicBackend, LocalStaticBackend
@@ -24,10 +25,12 @@ from repro.embedding.sharded_backends import (
 
 __all__ = [
     "BACKENDS",
+    "CachedSparseView",
     "EmbeddingEngine",
     "EngineConfig",
     "FeatureConfig",
     "LookupStats",
+    "LocalCachedBackend",
     "LocalDynamicBackend",
     "LocalStaticBackend",
     "ShardedDynamicBackend",

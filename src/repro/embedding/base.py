@@ -20,6 +20,11 @@ Backends
 --------
   local-dynamic   merged `DynamicHashTable`s on this host (HashTableCollection
                   path) — the paper's default training configuration.
+  local-cached    local-dynamic storage + a frequency-aware HBM cache: the
+                  host owns the full table, the device holds a fixed-budget
+                  hot-line pool behind a row→slot indirection, and the fused
+                  train step gathers/updates slots (embedding/cache/,
+                  docs/hbm_cache.md). Trains tables bigger than device memory.
   local-static    TorchRec-style fixed-capacity tables with a default-row
                   fallback — the accuracy baseline the paper replaces.
   sharded-dynamic model-parallel dynamic hash shards behind the two-stage
@@ -57,7 +62,13 @@ import jax
 from repro.core.sharded_embedding import LookupStats
 from repro.core.table_merging import FeatureConfig
 
-BACKENDS = ("local-dynamic", "local-static", "sharded-dynamic", "sharded-vocab")
+BACKENDS = (
+    "local-dynamic",
+    "local-cached",
+    "local-static",
+    "sharded-dynamic",
+    "sharded-vocab",
+)
 
 
 @dataclasses.dataclass
@@ -78,6 +89,11 @@ class EngineConfig:
     # static / vocab sizing (local-static / sharded-vocab)
     static_capacity: int = 1 << 16  # rows before the default-row fallback
     vocab_size: int = 0  # contiguous vocab rows (sharded-vocab)
+
+    # HBM-cache sizing (local-cached; see docs/hbm_cache.md)
+    cache_budget_rows: int = 1 << 14  # device hot-pool rows (HBM budget)
+    cache_line_rows: int = 64  # rows per cache line (swap granularity)
+    cache_ema: float = 0.9  # per-line access-frequency EMA decay
 
     # mesh placement (sharded-* only)
     mesh: Optional[Any] = None  # jax.sharding.Mesh
@@ -105,6 +121,16 @@ class EngineConfig:
             raise ValueError(f"backend {self.backend!r} requires a mesh")
         if self.backend == "sharded-vocab" and self.vocab_size <= 0:
             raise ValueError("sharded-vocab requires vocab_size > 0")
+        if self.backend == "local-cached":
+            if self.cache_line_rows < 1:
+                raise ValueError("local-cached requires cache_line_rows >= 1")
+            if self.cache_budget_rows < self.cache_line_rows:
+                raise ValueError(
+                    "local-cached requires cache_budget_rows >= cache_line_rows "
+                    f"(got {self.cache_budget_rows} < {self.cache_line_rows})"
+                )
+            if not (0.0 < self.cache_ema <= 1.0):
+                raise ValueError("cache_ema must be in (0, 1]")
 
 
 class EmbeddingBackend(Protocol):

@@ -1,0 +1,20 @@
+"""Frequency-aware HBM embedding cache (the `local-cached` backend).
+
+Trains tables bigger than device memory: the host keeps the full table
+(dynamic hash storage, §4.1), the device holds a fixed-budget pool of hot
+cache *lines* behind a row→slot indirection, and an EMA access-frequency
+score drives line swap-in/out at the host control-plane boundary each step.
+See docs/hbm_cache.md for the design.
+"""
+from repro.embedding.cache.backend import LocalCachedBackend
+from repro.embedding.cache.freq import EmaFrequency
+from repro.embedding.cache.pool import SwapPlan, TableCache
+from repro.embedding.cache.view import CachedSparseView
+
+__all__ = [
+    "CachedSparseView",
+    "EmaFrequency",
+    "LocalCachedBackend",
+    "SwapPlan",
+    "TableCache",
+]

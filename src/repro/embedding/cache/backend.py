@@ -1,0 +1,101 @@
+"""`LocalCachedBackend`: local-dynamic storage + frequency-aware HBM cache.
+
+Host truth is exactly `LocalDynamicBackend` — the merged dynamic hash tables
+of §4.1/§4.2, including counters/timestamps for eviction and the elastic
+checkpoint tree. Every host-facing verb (insert/lookup/apply_grads/evict/
+save/load) therefore inherits unchanged and behaves identically to
+`local-dynamic`; the cache only activates in device-resident training, where
+`EmbeddingEngine.device_view` borrows a `CachedSparseView` (fixed-budget
+pool + residency maps, cache/view.py) instead of whole tables.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+from repro.embedding.base import EngineConfig
+from repro.embedding.cache.pool import TableCache
+from repro.embedding.cache.view import CachedSparseView
+from repro.embedding.local_backends import LocalDynamicBackend
+
+# rowwise-Adam moments swap with their rows: one fp32 mu + one fp32 nu
+_MOMENT_NBYTES = 8
+
+
+class LocalCachedBackend(LocalDynamicBackend):
+    """Dynamic hash tables on host, hot-line pool on device."""
+
+    view_class = CachedSparseView
+
+    def __init__(self, features, cfg: EngineConfig, key: jax.Array):
+        super().__init__(features, cfg, key)
+        self._caches: Dict[str, TableCache] = {}
+
+    def table_cache(self, table: str) -> TableCache:
+        cache = self._caches.get(table)
+        if cache is None:
+            emb = self.table_emb(table)
+            cache = TableCache(
+                budget_rows=self.cfg.cache_budget_rows,
+                line_rows=self.cfg.cache_line_rows,
+                decay=self.cfg.cache_ema,
+                row_nbytes=emb.shape[1] * emb.dtype.itemsize + _MOMENT_NBYTES,
+            )
+            self._caches[table] = cache
+        return cache
+
+    # -- boundaries that invalidate line ↔ row meaning ---------------------
+
+    def evict(self, n: int, policy: str, step: int):
+        """Eviction compaction moves surviving rows to the table prefix, so
+        per-line EMA scores no longer describe the rows they cover. The
+        engine committed any live view before calling this."""
+        out = super().evict(n, policy, step)
+        for cache in self._caches.values():
+            cache.freq.reset()
+        return out
+
+    def load_shard_state_tree(self, shard: int, tree) -> None:
+        super().load_shard_state_tree(shard, tree)
+        for cache in self._caches.values():
+            cache.freq.reset()
+
+    # -- accounting --------------------------------------------------------
+
+    def nbytes(self) -> int:
+        """Host table bytes + the device pools' fixed budget (emb + moments).
+        Pool bytes are counted once a table's cache exists (first borrow)."""
+        total = super().nbytes()
+        for t, cache in self._caches.items():
+            total += cache.pool_rows * (
+                self.table_emb(t).shape[1] * self.table_emb(t).dtype.itemsize
+                + _MOMENT_NBYTES
+            )
+        return total
+
+    def cache_stats(self) -> Optional[Dict[str, float]]:
+        """Aggregate hit/miss/swap counters across tables, plus derived
+        rates. `last_*` keys cover the most recent prepare (per-step
+        metrics); the rest are cumulative since construction."""
+        if not self._caches:
+            return None
+        out: Dict[str, float] = {
+            k: 0
+            for k in (
+                "hits", "misses", "swap_in_rows", "swap_out_rows",
+                "swap_bytes", "last_hits", "last_misses", "last_swap_bytes",
+            )
+        }
+        for cache in self._caches.values():
+            for k in out:
+                out[k] += cache.stats[k]
+        lookups = out["hits"] + out["misses"]
+        out["hit_rate"] = out["hits"] / max(1, lookups)
+        out["last_hit_rate"] = out["last_hits"] / max(
+            1, out["last_hits"] + out["last_misses"]
+        )
+        return out
+
+
+__all__ = ["LocalCachedBackend"]

@@ -1,0 +1,63 @@
+"""Per-line access-frequency EMA — the cache's admission/eviction signal.
+
+The paper's eviction policies (§4.1) act on per-*row* counters inside the
+hash table; the HBM cache needs the same signal at cache-*line* granularity,
+cheap enough to update on every step's working set. We keep one EMA score
+per line and decay it lazily: instead of multiplying every line's score by
+`decay` each step (O(num_lines) host work per step), each line remembers the
+step it was last touched and the decay is applied on read as
+`score * decay**(now - last)`. Touch and read are both O(lines involved).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class EmaFrequency:
+    """Lazily-decayed EMA hit counters, one per cache line."""
+
+    def __init__(self, num_lines: int, decay: float = 0.9):
+        if not (0.0 < decay <= 1.0):
+            raise ValueError(f"decay must be in (0, 1], got {decay}")
+        self.decay = float(decay)
+        self.score = np.zeros(num_lines, np.float64)
+        self.last = np.zeros(num_lines, np.int64)
+        self.now = 0
+
+    @property
+    def num_lines(self) -> int:
+        return self.score.shape[0]
+
+    def grow(self, num_lines: int) -> None:
+        """Follow table growth: new lines start cold (score 0)."""
+        add = num_lines - self.num_lines
+        if add <= 0:
+            return
+        self.score = np.concatenate([self.score, np.zeros(add, np.float64)])
+        self.last = np.concatenate(
+            [self.last, np.full(add, self.now, np.int64)]
+        )
+
+    def touch(self, lines: np.ndarray) -> None:
+        """Advance time one step and bump the touched lines' EMAs."""
+        self.now += 1
+        if lines.size == 0:
+            return
+        dt = self.now - self.last[lines]
+        self.score[lines] = self.score[lines] * self.decay**dt + 1.0
+        self.last[lines] = self.now
+
+    def value(self, lines: np.ndarray) -> np.ndarray:
+        """Current (decayed-to-now) scores for `lines`."""
+        dt = self.now - self.last[lines]
+        return self.score[lines] * self.decay**dt
+
+    def reset(self) -> None:
+        """Forget all history (eviction compaction / checkpoint restore move
+        rows between lines, so old line scores no longer mean anything)."""
+        self.score[:] = 0.0
+        self.last[:] = 0
+        self.now = 0
+
+
+__all__ = ["EmaFrequency"]

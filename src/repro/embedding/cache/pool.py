@@ -1,0 +1,237 @@
+"""The hot-line pool control plane: residency maps, swap planning, handle
+translation.
+
+Layout
+------
+A table of R host rows is carved into lines of `line_rows` (L) consecutive
+rows; the device pool holds `num_slots` (S) line slots as one dense
+(S*L, d) array, so pool row handles are ordinary int32 indices and the fused
+step's dedup → unique-gather → rowwise-Adam scatter path works on the pool
+unchanged. Residency is a pair of maps:
+
+    line_to_slot : (num_lines,) int32, -1 = not resident  (host + device copy)
+    slot_to_line : (num_slots,) int64, -1 = free          (host only)
+
+The device copy of `line_to_slot` is what keeps lookup fully in-jit: a host
+row handle r translates to `line_to_slot[r // L] * L + r % L` on device, -1
+padding staying -1. It is updated *incrementally* (O(lines swapped), never
+O(num_lines)) after each swap plan.
+
+Swap planning is pure host work over the step's unique working set (the
+fused step's dedup already defines it): touched lines bump the EMA
+frequency, misses take free slots first, then evict the coldest resident
+lines that are neither touched this step nor *pinned*. Pinned lines carry
+pending gradients of an open accumulation window (§5.2) — their pool slots
+are referenced by device-resident accumulator entries, so swapping them out
+would corrupt the window. Pins clear at window boundaries (view.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.embedding.cache.freq import EmaFrequency
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapPlan:
+    """One step's residency change, in host-line / pool-slot coordinates.
+
+    `load_*` covers every missing line of the working set; `evict_*` is the
+    subset of destination slots that still hold a resident line and must be
+    written back (host truth) before being overwritten.
+    """
+
+    load_lines: np.ndarray  # (k,) host lines to swap in
+    load_slots: np.ndarray  # (k,) their destination slots
+    evict_lines: np.ndarray  # (m,) m <= k: lines being displaced
+    evict_slots: np.ndarray  # (m,) their (pre-reuse) slots
+
+
+def line_rows_np(lines: np.ndarray, line_rows: int) -> np.ndarray:
+    """Expand line indices to their (len(lines)*L,) member-row indices."""
+    return (
+        lines[:, None] * line_rows + np.arange(line_rows, dtype=lines.dtype)
+    ).reshape(-1)
+
+
+class TableCache:
+    """Per-merged-table residency state + swap planner (host control plane)."""
+
+    def __init__(
+        self,
+        budget_rows: int,
+        line_rows: int,
+        decay: float,
+        row_nbytes: int,
+    ):
+        if line_rows < 1:
+            raise ValueError("line_rows must be >= 1")
+        self.line_rows = int(line_rows)
+        self.num_slots = int(budget_rows) // self.line_rows
+        if self.num_slots < 1:
+            raise ValueError(
+                f"budget_rows={budget_rows} holds zero lines of {line_rows} rows"
+            )
+        self.row_nbytes = int(row_nbytes)  # emb row + its rowwise moments
+        self.freq = EmaFrequency(0, decay)
+        self.line_to_slot = np.zeros(0, np.int32)
+        self.slot_to_line = np.full(self.num_slots, -1, np.int64)
+        self.pinned = np.zeros(0, bool)
+        self.line_to_slot_dev: Optional[jax.Array] = None
+        self._put: Callable = lambda tree: tree
+        self.stats: Dict[str, int] = {
+            k: 0
+            for k in (
+                "hits", "misses", "swap_in_rows", "swap_out_rows",
+                "swap_bytes", "last_hits", "last_misses", "last_swap_bytes",
+            )
+        }
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @property
+    def pool_rows(self) -> int:
+        return self.num_slots * self.line_rows
+
+    def num_lines_for(self, host_rows: int) -> int:
+        return -(-host_rows // self.line_rows)  # ceil div
+
+    def reset(self, host_rows: int, put: Optional[Callable] = None) -> None:
+        """Cold-start residency for a fresh borrow (nothing resident). EMA
+        scores survive so hotness learned before a commit boundary still
+        guides admission after the re-borrow."""
+        n = self.num_lines_for(host_rows)
+        self._put = put or (lambda tree: tree)
+        self.line_to_slot = np.full(n, -1, np.int32)
+        self.slot_to_line = np.full(self.num_slots, -1, np.int64)
+        self.pinned = np.zeros(n, bool)
+        if self.freq.num_lines != n:
+            if self.freq.num_lines < n:
+                self.freq.grow(n)
+            else:  # table shrank (eviction compaction): scores meaningless
+                self.freq = EmaFrequency(n, self.freq.decay)
+        self.line_to_slot_dev = self._put(jnp.asarray(self.line_to_slot))
+
+    def grow(self, host_rows: int) -> None:
+        """Follow chunk/key expansion: extend the maps, pool untouched."""
+        n = self.num_lines_for(host_rows)
+        add = n - self.line_to_slot.shape[0]
+        if add <= 0:
+            return
+        self.line_to_slot = np.concatenate(
+            [self.line_to_slot, np.full(add, -1, np.int32)]
+        )
+        self.pinned = np.concatenate([self.pinned, np.zeros(add, bool)])
+        self.freq.grow(n)
+        self.line_to_slot_dev = self._put(
+            jnp.concatenate(
+                [self.line_to_slot_dev, jnp.full((add,), -1, jnp.int32)]
+            )
+        )
+
+    # -- planning ----------------------------------------------------------
+
+    def prepare(
+        self, unique_rows: np.ndarray, clear_pins: bool
+    ) -> Optional[SwapPlan]:
+        """Plan this step's swaps for a working set of unique host rows
+        (padding already stripped). Updates residency maps, the device
+        indirection, pins, EMA scores, and hit/miss stats; returns None when
+        everything is already resident."""
+        L = self.line_rows
+        if clear_pins:
+            self.pinned[:] = False
+        if unique_rows.size == 0:
+            self.stats["last_hits"] = self.stats["last_misses"] = 0
+            self.stats["last_swap_bytes"] = 0
+            return None
+        lines = np.unique(unique_rows // L)
+        # hit/miss accounting is per unique *row* (what lookup resolves),
+        # planning is per *line* (what swaps move)
+        row_hit = self.line_to_slot[unique_rows // L] >= 0
+        hits = int(row_hit.sum())
+        misses = int(unique_rows.size - hits)
+        self.stats["hits"] += hits
+        self.stats["misses"] += misses
+        self.stats["last_hits"] = hits
+        self.stats["last_misses"] = misses
+        self.freq.touch(lines)
+        miss_lines = lines[self.line_to_slot[lines] < 0]
+        self.pinned[lines] = True
+        if miss_lines.size == 0:
+            self.stats["last_swap_bytes"] = 0
+            return None
+        free = np.flatnonzero(self.slot_to_line < 0)
+        need = miss_lines.size - free.size
+        evict_lines = np.zeros(0, np.int64)
+        evict_slots = np.zeros(0, np.int64)
+        if need > 0:
+            resident = self.slot_to_line[self.slot_to_line >= 0]
+            cand = resident[~self.pinned[resident]]
+            if cand.size < need:
+                raise ValueError(
+                    f"HBM cache budget exhausted: need {need} more line slots "
+                    f"but only {cand.size} unpinned resident lines are "
+                    f"evictable ({self.num_slots} slots of {L} rows; working "
+                    "set + open accumulation window exceed the budget). "
+                    "Raise cache_budget_rows, shrink cache_line_rows / the "
+                    "batch, or reduce accum_batches."
+                )
+            order = np.argsort(self.freq.value(cand), kind="stable")
+            evict_lines = cand[order[:need]]
+            evict_slots = self.line_to_slot[evict_lines].astype(np.int64)
+            self.line_to_slot[evict_lines] = -1
+            self.slot_to_line[evict_slots] = -1
+        load_slots = np.concatenate(
+            [free[: miss_lines.size], evict_slots]
+        )[: miss_lines.size].astype(np.int64)
+        self.line_to_slot[miss_lines] = load_slots.astype(np.int32)
+        self.slot_to_line[load_slots] = miss_lines
+        upd_lines = np.concatenate([evict_lines, miss_lines])
+        upd_slots = np.concatenate(
+            [np.full(evict_lines.size, -1, np.int32),
+             load_slots.astype(np.int32)]
+        )
+        self.line_to_slot_dev = self.line_to_slot_dev.at[
+            jnp.asarray(upd_lines)
+        ].set(jnp.asarray(upd_slots))
+        swap_rows = (miss_lines.size + evict_lines.size) * L
+        self.stats["swap_in_rows"] += miss_lines.size * L
+        self.stats["swap_out_rows"] += evict_lines.size * L
+        self.stats["last_swap_bytes"] = swap_rows * self.row_nbytes
+        self.stats["swap_bytes"] += self.stats["last_swap_bytes"]
+        return SwapPlan(miss_lines, load_slots, evict_lines, evict_slots)
+
+    # -- handle translation ------------------------------------------------
+
+    def translate(self, rows: jax.Array) -> jax.Array:
+        """Host-row handles → pool-slot handles, fully on device (the
+        jit-visible half of the indirection). -1 padding stays -1; a
+        non-resident line also yields -1 (prepare() makes that unreachable
+        for the step's own working set)."""
+        L = self.line_rows
+        r = jnp.where(rows >= 0, rows, 0)
+        slot = self.line_to_slot_dev[r // L]
+        handle = slot * L + r % L
+        return jnp.where(
+            (rows >= 0) & (slot >= 0), handle, -1
+        ).astype(jnp.int32)
+
+    def slots_to_rows(self, slot_handles: np.ndarray) -> np.ndarray:
+        """Pool-slot handles → host-row handles (host side; used to retarget
+        pending accumulator entries at commit). -1 stays -1."""
+        L = self.line_rows
+        s = np.where(slot_handles >= 0, slot_handles, 0)
+        line = self.slot_to_line[s // L]
+        rows = line * L + s % L
+        return np.where(
+            (slot_handles >= 0) & (line >= 0), rows, -1
+        ).astype(slot_handles.dtype)
+
+
+__all__ = ["SwapPlan", "TableCache", "line_rows_np"]

@@ -1,0 +1,215 @@
+"""`CachedSparseView`: the device_view state machine over a hot-line pool.
+
+Same borrow/commit contract as `SparseDeviceView` (embedding/device_view.py)
+— the fused train step cannot tell the difference: it still receives one
+dense (rows, d) embedding array + rowwise-Adam moments per table, donates
+them, and gets them back. The difference is what those arrays *are*:
+
+  * borrow    places a fixed-budget pool (num_slots * line_rows rows) per
+              table instead of the whole table — nothing resident yet, EMA
+              scores carried over.
+  * prepare   (new, once per step, host control plane) translates the
+              batch's host-row handles into pool-slot handles, swapping
+              missing lines in and cold lines out first. Rowwise-Adam
+              moments travel with their rows in both directions, so the
+              update math on pool slots is bit-for-bit the update the
+              whole-table view would do on host rows.
+  * growth    only extends the residency maps — the pool never changes
+              shape, so `insert`-driven expansion costs O(new lines of map).
+  * commit    writes every resident line (rows + moments + the shared Adam
+              step scalar) back to host truth and drops the view; host-side
+              verbs (lookup/apply_grads/evict/save) then see exactly the
+              state a whole-table run would have.
+
+Open accumulation windows (§5.2) pin their lines: device accumulators hold
+pool-slot handles, so a line with pending gradients must stay put until the
+window drains. Pins clear at the first prepare of each window, and at commit
+the pending handles are retargeted slot→host-row so the engine's host-side
+flush applies them to the right rows.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.embedding.cache.pool import SwapPlan, TableCache, line_rows_np
+from repro.embedding.device_view import SparseDeviceView
+from repro.optim.rowwise_adam import RowwiseAdam, RowwiseAdamState
+
+
+def _host_scatter_rows(dst: jax.Array, host_rows: np.ndarray,
+                       vals: jax.Array) -> jax.Array:
+    """Scatter `vals` into `dst` at `host_rows`, dropping rows past the end
+    (a partial last line maps slots past row_capacity — those pool rows are
+    padding and never hold data)."""
+    n = dst.shape[0]
+    idx = jnp.asarray(np.where(host_rows < n, host_rows, n))
+    return dst.at[idx].set(vals, mode="drop")
+
+
+def _host_gather_rows(src: jax.Array, host_rows: np.ndarray) -> jax.Array:
+    """Gather `host_rows` from `src`; rows past the end (partial last line)
+    read row 0 — their pool slots are never referenced by any handle."""
+    idx = jnp.asarray(np.where(host_rows < src.shape[0], host_rows, 0))
+    return src[idx]
+
+
+class CachedSparseView(SparseDeviceView):
+    """Borrowed fixed-budget pool buffers + host-side residency control."""
+
+    whole_table = False
+
+    def __init__(self, backend, tables, emb, opt,
+                 put: Optional[Callable] = None):
+        super().__init__(tables, emb, opt, put)
+        self.backend = backend
+
+    @classmethod
+    def borrow(cls, backend, opt_states: Dict[str, RowwiseAdamState],
+               put: Optional[Callable] = None) -> "CachedSparseView":
+        """Place one pool (embeddings + moments) per merged table. Cold
+        start: lines swap in on first touch, so borrow is O(budget), never
+        O(table) — the point of the cache."""
+        place = put or (lambda tree: tree)
+        tables = backend.table_names()
+        emb: Dict[str, jax.Array] = {}
+        opt: Dict[str, RowwiseAdamState] = {}
+        for t in tables:
+            cache = backend.table_cache(t)
+            cache.reset(backend.row_capacity(t), put)
+            host = backend.table_emb(t)
+            rows = cache.pool_rows
+            emb[t] = place(jnp.zeros((rows, host.shape[1]), host.dtype))
+            st = opt_states[t]
+            opt[t] = place(
+                RowwiseAdamState(
+                    step=jnp.copy(st.step),
+                    mu=jnp.zeros((rows,), st.mu.dtype),
+                    nu=jnp.zeros((rows,), st.nu.dtype),
+                )
+            )
+        return cls(backend, tables, emb, opt, put)
+
+    # -- per-step control plane -------------------------------------------
+
+    def prepare(
+        self,
+        rows: Dict[str, jax.Array],
+        opt_states: Dict[str, RowwiseAdamState],
+    ) -> Dict[str, jax.Array]:
+        """Admit this step's working set and translate handles.
+
+        `rows` maps feature → host-row handles (insert's output, -1 = pad).
+        Returns the same features with pool-slot handles of identical shape.
+        Misses are surfaced here — before the jitted step — so the compiled
+        program never branches on residency."""
+        per_table: Dict[str, list] = {}
+        for f in rows:
+            per_table.setdefault(self.backend.table_of(f), []).append(f)
+        out = dict(rows)
+        for t, feats in per_table.items():
+            cache = self.backend.table_cache(t)
+            flat = np.concatenate(
+                [np.asarray(rows[f]).reshape(-1) for f in feats]
+            )
+            uniq = np.unique(flat)
+            uniq = uniq[uniq >= 0]
+            # window boundary: the session zeroes acc_used when a window
+            # drains, which is exactly when pinned lines become movable
+            plan = cache.prepare(
+                uniq, clear_pins=self.acc_used.get(t, 0) == 0
+            )
+            if plan is not None:
+                self._apply_swaps(t, cache, plan, opt_states)
+            for f in feats:
+                out[f] = cache.translate(jnp.asarray(rows[f]))
+        return out
+
+    def _apply_swaps(
+        self,
+        table: str,
+        cache: TableCache,
+        plan: SwapPlan,
+        opt_states: Dict[str, RowwiseAdamState],
+    ) -> None:
+        """Execute a swap plan: victims pool→host first (so host truth is
+        current), then misses host→pool. Moments move with their rows; the
+        host opt state keeps the pool's live Adam step scalar so a
+        mid-training commit is self-consistent."""
+        L = cache.line_rows
+        host_emb = self.backend.table_emb(table)
+        st = opt_states[table]
+        host_mu, host_nu = st.mu, st.nu
+        if plan.evict_lines.size:
+            hr = line_rows_np(plan.evict_lines, L)
+            pr = jnp.asarray(line_rows_np(plan.evict_slots, L))
+            host_emb = _host_scatter_rows(host_emb, hr, self.emb[table][pr])
+            host_mu = _host_scatter_rows(host_mu, hr, self.opt[table].mu[pr])
+            host_nu = _host_scatter_rows(host_nu, hr, self.opt[table].nu[pr])
+            self.backend.set_table_emb(table, host_emb)
+        opt_states[table] = RowwiseAdamState(
+            step=self.opt[table].step, mu=host_mu, nu=host_nu
+        )
+        if plan.load_lines.size:
+            hr = line_rows_np(plan.load_lines, L)
+            pr = jnp.asarray(line_rows_np(plan.load_slots, L))
+            self.emb[table] = self.emb[table].at[pr].set(
+                _host_gather_rows(host_emb, hr)
+            )
+            pool_opt = self.opt[table]
+            self.opt[table] = RowwiseAdamState(
+                step=pool_opt.step,
+                mu=pool_opt.mu.at[pr].set(_host_gather_rows(host_mu, hr)),
+                nu=pool_opt.nu.at[pr].set(_host_gather_rows(host_nu, hr)),
+            )
+
+    # -- state-machine overrides ------------------------------------------
+
+    def migrate_capacity(self, table: str, host_emb: jax.Array,
+                         sparse_opt: RowwiseAdam) -> None:
+        """Growth extends the residency maps only — the pool is fixed-budget
+        and new rows are simply not resident yet (host truth already holds
+        their fresh init)."""
+        self.backend.table_cache(table).grow(host_emb.shape[0])
+
+    def commit(self, backend, opt_states: Dict[str, RowwiseAdamState]) -> None:
+        """Write every resident line back to host truth (embeddings, moments,
+        Adam step) — the cached analogue of the whole-table write-back."""
+        for t in self.tables:
+            cache = backend.table_cache(t)
+            resident = np.flatnonzero(cache.line_to_slot >= 0)
+            st = opt_states[t]
+            host_mu, host_nu = st.mu, st.nu
+            if resident.size:
+                L = cache.line_rows
+                hr = line_rows_np(resident.astype(np.int64), L)
+                slots = cache.line_to_slot[resident].astype(np.int64)
+                pr = jnp.asarray(line_rows_np(slots, L))
+                backend.set_table_emb(
+                    t,
+                    _host_scatter_rows(
+                        backend.table_emb(t), hr, self.emb[t][pr]
+                    ),
+                )
+                host_mu = _host_scatter_rows(host_mu, hr, self.opt[t].mu[pr])
+                host_nu = _host_scatter_rows(host_nu, hr, self.opt[t].nu[pr])
+                cache.stats["swap_out_rows"] += hr.size
+                cache.stats["swap_bytes"] += hr.size * cache.row_nbytes
+            opt_states[t] = RowwiseAdamState(
+                step=self.opt[t].step, mu=host_mu, nu=host_nu
+            )
+
+    def acc_table_rows(self, table: str, rows: jax.Array) -> jax.Array:
+        """Pending accumulator entries hold pool-slot handles; retarget them
+        to host rows so the engine's host-side flush scatters correctly.
+        Residency maps are still intact here — commit() doesn't clear them
+        (the next borrow's reset does), and pinning kept every line with
+        pending gradients resident."""
+        cache = self.backend.table_cache(table)
+        return jnp.asarray(cache.slots_to_rows(np.asarray(rows)))
+
+
+__all__ = ["CachedSparseView"]

@@ -45,6 +45,12 @@ from repro.optim.rowwise_adam import RowwiseAdam, RowwiseAdamState
 class SparseDeviceView:
     """Borrowed device-resident (table, moments, accum-window) buffers."""
 
+    # Whole-table views hold every row on device, so reads (`emb_of`,
+    # `opt_state`) can go through the view and per-step handle preparation
+    # is the identity. The HBM-cached view (embedding/cache/view.py) flips
+    # this off: it holds a fixed-budget pool behind a row→slot indirection.
+    whole_table = True
+
     def __init__(
         self,
         tables: Tuple[str, ...],
@@ -85,6 +91,25 @@ class SparseDeviceView:
 
     def row_capacity(self, table: str) -> int:
         return self.emb[table].shape[0]
+
+    def commit(self, backend, opt_states: Dict[str, RowwiseAdamState]) -> None:
+        """Write the borrowed buffers back to the backend + engine opt
+        states (host-authoritative again). Subclasses that hold less than
+        the whole table override this with their own write-back."""
+        for t in self.tables:
+            backend.set_table_emb(t, self.emb[t])
+            opt_states[t] = self.opt[t]
+
+    def prepare(self, rows: Dict[str, jax.Array], opt_states) -> Dict[str, jax.Array]:
+        """Per-step handle preparation. Whole-table views hold every row, so
+        handles pass through unchanged; the cached view swaps lines and
+        translates host rows → pool slots here."""
+        return rows
+
+    def acc_table_rows(self, table: str, rows: jax.Array) -> jax.Array:
+        """Translate pending-accumulator handles to host-row handles at
+        commit. Identity for whole-table views (handles ARE host rows)."""
+        return rows
 
     def migrate_capacity(self, table: str, host_emb: jax.Array,
                          sparse_opt: RowwiseAdam) -> None:

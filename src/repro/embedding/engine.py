@@ -43,6 +43,7 @@ from repro.core.table_merging import FeatureConfig
 from repro.optim.rowwise_adam import RowwiseAdam, RowwiseAdamState
 
 from repro.embedding.base import EngineConfig
+from repro.embedding.cache.backend import LocalCachedBackend
 from repro.embedding.device_view import SparseDeviceView
 from repro.embedding.local_backends import LocalDynamicBackend, LocalStaticBackend
 from repro.embedding.sharded_backends import (
@@ -52,6 +53,7 @@ from repro.embedding.sharded_backends import (
 
 _BACKEND_CLASSES = {
     "local-dynamic": LocalDynamicBackend,
+    "local-cached": LocalCachedBackend,
     "local-static": LocalStaticBackend,
     "sharded-dynamic": ShardedDynamicBackend,
     "sharded-vocab": ShardedVocabBackend,
@@ -144,13 +146,31 @@ class EmbeddingEngine:
         if self._view is None:
             for t in self.backend.table_names():
                 self._opt_state_for(t)  # sized to current capacity
-            self._view = SparseDeviceView.borrow(
-                self.backend, self._opt_states, put
-            )
+            view_cls = getattr(self.backend, "view_class", SparseDeviceView)
+            self._view = view_cls.borrow(self.backend, self._opt_states, put)
         return self._view
 
     def has_device_view(self) -> bool:
         return self._view is not None
+
+    def prepare_rows(self, rows: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        """Per-step handle preparation for the fused train step.
+
+        Whole-table views return `rows` unchanged. The HBM-cached view
+        (local-cached backend) swaps this step's missing cache lines onto
+        the device here — at the host control-plane boundary, BEFORE the
+        jitted step — and returns pool-slot handles of identical shape, so
+        the compiled program never branches on residency. Call this after
+        `device_view()`/`insert()` and before building jit arguments."""
+        if self._view is None or self._view.whole_table:
+            return rows
+        return self._view.prepare(rows, self._opt_states)
+
+    def cache_stats(self):
+        """HBM-cache hit/miss/swap counters (None unless the backend
+        caches; see LocalCachedBackend.cache_stats)."""
+        fn = getattr(self.backend, "cache_stats", None)
+        return fn() if fn is not None else None
 
     def _commit_device_view(self) -> None:
         """Write the borrowed buffers back to the backend (host-authoritative
@@ -164,13 +184,16 @@ class EmbeddingEngine:
         v, self._view = self._view, None
         if v is None:
             return
-        for t in v.tables:
-            self.backend.set_table_emb(t, v.emb[t])
-            self._opt_states[t] = v.opt[t]
+        v.commit(self.backend, self._opt_states)
         for t, acc in v.acc.items():
             used = v.acc_used.get(t, 0)
             if not used:
                 continue
+            # cached views store pool-slot handles in the accumulator;
+            # retarget them to host rows (identity for whole-table views)
+            rows = v.acc_table_rows(t, acc.rows)
+            if rows is not acc.rows:
+                acc = acc._replace(rows=rows)
             host = self._accums.get(t)
             host_used = self._accum_used.get(t, 0)
             if host is None or host_used == 0:
@@ -204,6 +227,11 @@ class EmbeddingEngine:
                 self._view.migrate_capacity(
                     t, self.backend.table_emb(t), self.sparse_opt
                 )
+                if not self._view.whole_table:
+                    # cached view: host moments are authoritative (the pool
+                    # only holds the resident lines' slices) — they must
+                    # follow growth or swap-ins of new rows read garbage
+                    self._opt_state_for(t)
         return out
 
     def rows_for(self, feature: str, ids: jax.Array) -> jax.Array:
@@ -217,7 +245,11 @@ class EmbeddingEngine:
         self._check(feature)
         table = self.backend.table_of(feature)
         if self._view is not None:
-            return self._view.emb[table]
+            if self._view.whole_table:
+                return self._view.emb[table]
+            # cached view: the pool is not the table — commit first so the
+            # backend's host copy is current (control-plane read, rare)
+            self.flush()
         return self.backend.table_emb(table)
 
     def lookup(
@@ -364,7 +396,9 @@ class EmbeddingEngine:
 
     def opt_state(self, table: str) -> Optional[RowwiseAdamState]:
         if self._view is not None and table in self._view.opt:
-            return self._view.opt[table]
+            if self._view.whole_table:
+                return self._view.opt[table]
+            self.flush()  # pool-sized moments aren't the table's moments
         return self._opt_states.get(table)
 
     # ------------------------------------------------------------------

@@ -39,8 +39,10 @@ def train_grm(cfg, args) -> None:
                              max_len=avg_len * 5, seed=0)
     session = TrainSession(SessionConfig(
         model=cfg,
-        engine=EngineConfig(backend="local-dynamic", capacity=1 << 12,
-                            chunk_rows=512, accum_batches=1),
+        engine=EngineConfig(backend=args.backend, capacity=1 << 12,
+                            chunk_rows=512, accum_batches=1,
+                            static_capacity=scfg.num_items,
+                            cache_budget_rows=1 << 10, cache_line_rows=1),
         num_devices=args.devices,
         layout="packed" if args.packed else "padded",
         sync=args.sync,
@@ -84,6 +86,11 @@ def main():
     ap.add_argument("--sync", default="weighted",
                     choices=["weighted", "unweighted", "none"],
                     help="GRM: §5.1 gradient synchronization mode")
+    ap.add_argument("--backend", default="local-dynamic",
+                    choices=["local-dynamic", "local-cached", "local-static"],
+                    help="GRM: embedding storage backend (local-cached = "
+                         "frequency-aware HBM cache, docs/hbm_cache.md; "
+                         "sharded-* backends need the multi-host session)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

@@ -357,6 +357,13 @@ class TrainSession:
         the session's state buffers immediately (never touch the donated
         inputs again)."""
         view = self.engine.device_view(put=self._put_replicated)
+        # HBM-cache prepare phase (local-cached backend): surface this
+        # step's cache misses at the host control-plane boundary — swap the
+        # missing lines in, translate host-row handles to pool-slot handles
+        # (same shapes). Identity for whole-table views. Must run here, not
+        # in _sparse_phase: under train_stream the sparse phase of batch T+1
+        # overlaps batch T's step, whose outputs the swaps must see.
+        rows = self.engine.prepare_rows(rows)
         feat_table = tuple(sorted(
             (f, self.engine.table_of(f)) for f in rows
         ))
@@ -425,6 +432,15 @@ class TrainSession:
         dispatch/compute overlap); convert lazily where they are consumed."""
         if self.fused:
             loss, metrics = outputs
+            cs = self.engine.cache_stats()
+            if cs is not None:
+                # host floats (the cache control plane already knows them —
+                # no device sync): this step's hit rate + swap traffic
+                metrics = {
+                    **metrics,
+                    "cache_hit_rate": cs["last_hit_rate"],
+                    "cache_swap_mb": cs["last_swap_bytes"] / 1e6,
+                }
         else:
             loss, metrics, dense_grads, emb_grads = outputs
             self.engine.apply_grads(rows, emb_grads)

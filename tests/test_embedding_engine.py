@@ -211,7 +211,8 @@ def test_sharded_evict_preserves_nonevicting_shard_moments():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("backend", ["local-dynamic", "local-static"])
+@pytest.mark.parametrize("backend", ["local-dynamic", "local-cached",
+                                     "local-static"])
 def test_engine_save_load_roundtrip(backend):
     def build(key):
         return EmbeddingEngine(
@@ -322,3 +323,99 @@ def test_device_view_borrow_commit_and_growth():
     np.testing.assert_allclose(
         np.asarray(eng.backend.table_emb(table))[np.asarray(h)],
         before + 1.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Config validation + backend registry consistency
+# ---------------------------------------------------------------------------
+
+
+def test_engine_config_rejects_unknown_backend():
+    """A bad backend name must fail AT CONSTRUCTION with the valid names in
+    the message — not as a late KeyError inside EmbeddingEngine."""
+    with pytest.raises(ValueError, match="local-dynamic"):
+        EngineConfig(backend="torchrec")
+    with pytest.raises(ValueError, match="unknown backend"):
+        EngineConfig(backend="")
+    # every advertised name has a registered implementation (and vice versa):
+    # a drifting registry would turn a valid config into an opaque failure
+    from repro.embedding import BACKENDS
+    from repro.embedding.engine import _BACKEND_CLASSES
+
+    assert set(_BACKEND_CLASSES) == set(BACKENDS)
+
+
+def test_engine_config_validates_cache_sizing():
+    with pytest.raises(ValueError, match="cache_budget_rows"):
+        EngineConfig(backend="local-cached", cache_budget_rows=4,
+                     cache_line_rows=8)
+    with pytest.raises(ValueError, match="cache_line_rows"):
+        EngineConfig(backend="local-cached", cache_line_rows=0)
+    with pytest.raises(ValueError, match="cache_ema"):
+        EngineConfig(backend="local-cached", cache_ema=1.5)
+    # other backends ignore cache sizing entirely
+    EngineConfig(backend="local-dynamic", cache_budget_rows=0)
+
+
+# ---------------------------------------------------------------------------
+# local-cached vs local-dynamic: host-verb parity
+# ---------------------------------------------------------------------------
+
+
+def _cached_engine(accum=1, chunk_rows=128, **kw):
+    return EmbeddingEngine(
+        _feats(),
+        EngineConfig(backend="local-cached", capacity=1 << 10,
+                     chunk_rows=chunk_rows, accum_batches=accum,
+                     cache_budget_rows=64, cache_line_rows=4, **kw),
+        jax.random.PRNGKey(3),
+    )
+
+
+def test_cached_backend_host_parity_with_dynamic():
+    """The cached backend's host truth IS local-dynamic: the same ID stream
+    through insert/lookup/apply_grads/evict must produce bit-identical
+    handles, vectors, tables, and moments (the cache only activates in
+    device-resident training — and training in between must not break the
+    parity either)."""
+    dyn, cac = _local_engine(), _cached_engine()
+    for seed in (0, 1, 2):
+        batch = _batch(seed)
+        rd, rc = dyn.insert(batch), cac.insert(batch)
+        for f in batch:
+            np.testing.assert_array_equal(np.asarray(rd[f]), np.asarray(rc[f]))
+        ld, _ = dyn.lookup(batch)
+        lc, _ = cac.lookup(batch)
+        for f in batch:
+            np.testing.assert_array_equal(np.asarray(ld[f]), np.asarray(lc[f]))
+        grads = {f: jnp.ones(r.shape + (16,), jnp.float32)
+                 for f, r in rd.items()}
+        dyn.apply_grads(rd, grads)
+        cac.apply_grads(rc, grads)
+        # train one borrowed round through the cached view in between: the
+        # committed state must stay on the dynamic engine's trajectory
+        view = cac.device_view()
+        slots = cac.prepare_rows(rc)
+        t = cac.backend.table_of("item")
+        sflat = np.asarray(slots["item"]).reshape(-1)
+        sflat = sflat[sflat >= 0]
+        view.emb[t] = view.emb[t].at[sflat].add(0.0)  # no-op touch
+        cac.flush()
+    assert dyn.table_sizes() == cac.table_sizes()
+    for t in dyn.merged_tables:
+        np.testing.assert_array_equal(
+            np.asarray(dyn.backend.table_emb(t)),
+            np.asarray(cac.backend.table_emb(t)),
+        )
+        a, b = dyn.opt_state(t), cac.opt_state(t)
+        np.testing.assert_array_equal(np.asarray(a.mu), np.asarray(b.mu))
+        np.testing.assert_array_equal(np.asarray(a.nu), np.asarray(b.nu))
+    # eviction: identical counters -> identical survivors + compaction
+    ed, ec = dyn.evict(3), cac.evict(3)
+    assert ed == ec
+    for t in dyn.merged_tables:
+        np.testing.assert_array_equal(
+            np.asarray(dyn.backend.table_emb(t)),
+            np.asarray(cac.backend.table_emb(t)),
+        )
+    assert dyn.table_sizes() == cac.table_sizes()

@@ -1,0 +1,224 @@
+"""HBM-cache subsystem unit tests (embedding/cache/):
+
+  * EMA frequency: lazy decay matches the eager per-step definition,
+  * TableCache planning: hits/misses, free-slots-first allocation, coldest
+    victims, pin exclusion, budget-overflow error, partial last line,
+  * handle translation: row -> slot on device and slot -> row on host are
+    inverse on the resident set, -1 padding preserved,
+  * growth extends residency maps without moving anything,
+  * CachedSparseView: borrow -> prepare -> train-like pool write -> commit
+    round-trips rows AND moments to host truth.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.embedding import EmbeddingEngine, EngineConfig, FeatureConfig
+from repro.embedding.cache.freq import EmaFrequency
+from repro.embedding.cache.pool import TableCache, line_rows_np
+
+
+def _cache(budget=16, line=4, decay=0.5, host_rows=64):
+    c = TableCache(budget_rows=budget, line_rows=line, decay=decay,
+                   row_nbytes=72)
+    c.reset(host_rows)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# EMA frequency
+# ---------------------------------------------------------------------------
+
+
+def test_ema_lazy_decay_matches_eager():
+    """score*decay**(now-last) on read must equal decaying every line every
+    step eagerly."""
+    decay = 0.7
+    f = EmaFrequency(4, decay)
+    eager = np.zeros(4)
+    touches = [[0, 1], [1], [2], [1, 3], [], [0]]
+    for lines in touches:
+        f.touch(np.asarray(lines, np.int64))
+        eager *= decay
+        for l in lines:
+            eager[l] += 1.0
+    np.testing.assert_allclose(
+        f.value(np.arange(4)), eager, rtol=1e-12
+    )
+
+
+def test_ema_grow_and_reset():
+    f = EmaFrequency(2, 0.9)
+    f.touch(np.asarray([0, 1]))
+    f.grow(4)
+    assert f.num_lines == 4
+    assert (f.value(np.asarray([2, 3])) == 0.0).all()  # new lines cold
+    f.reset()
+    assert (f.value(np.arange(4)) == 0.0).all()
+
+
+# ---------------------------------------------------------------------------
+# TableCache planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_free_slots_first_then_hits():
+    c = _cache(budget=16, line=4, host_rows=64)  # 4 slots, 16 lines
+    plan = c.prepare(np.asarray([0, 1, 5, 9]), clear_pins=True)  # lines 0,1,2
+    assert plan is not None
+    np.testing.assert_array_equal(np.sort(plan.load_lines), [0, 1, 2])
+    assert plan.evict_lines.size == 0  # all free slots
+    assert c.stats["last_misses"] == 4 and c.stats["last_hits"] == 0
+    # same working set again: pure hits, no plan
+    assert c.prepare(np.asarray([0, 1, 5, 9]), clear_pins=True) is None
+    assert c.stats["last_hits"] == 4 and c.stats["last_misses"] == 0
+
+
+def test_plan_evicts_coldest_unpinned():
+    c = _cache(budget=8, line=2, decay=0.5, host_rows=32)  # 4 slots
+    c.prepare(np.asarray([0]), clear_pins=True)   # line 0
+    c.prepare(np.asarray([2]), clear_pins=True)   # line 1
+    c.prepare(np.asarray([4]), clear_pins=True)   # line 2
+    c.prepare(np.asarray([6]), clear_pins=True)   # line 3 -> pool full
+    # line 0 is the coldest (touched longest ago); line 8//2=4 must evict it
+    plan = c.prepare(np.asarray([8]), clear_pins=True)
+    np.testing.assert_array_equal(plan.evict_lines, [0])
+    assert c.line_to_slot[0] == -1 and c.line_to_slot[4] >= 0
+
+
+def test_plan_pinned_lines_are_not_victims():
+    c = _cache(budget=8, line=2, decay=0.5, host_rows=32)  # 4 slots
+    # make lines 2,3 very hot across several window boundaries
+    for _ in range(3):
+        c.prepare(np.asarray([4, 6]), clear_pins=True)
+    # new window: lines 0,1 swap in (cold, score 1) and are pinned;
+    # the boundary unpins hot lines 2,3
+    c.prepare(np.asarray([0, 2]), clear_pins=True)
+    # mid-window miss: the only evictable lines are the UNPINNED 2,3 —
+    # pinning must beat frequency (they are the hottest residents)
+    plan = c.prepare(np.asarray([8, 10]), clear_pins=False)
+    np.testing.assert_array_equal(np.sort(plan.evict_lines), [2, 3])
+    assert c.line_to_slot[0] >= 0 and c.line_to_slot[1] >= 0
+
+
+def test_plan_overflow_raises_actionable_error():
+    c = _cache(budget=4, line=2, host_rows=32)  # 2 slots
+    c.prepare(np.asarray([0, 2]), clear_pins=True)  # both slots pinned
+    with pytest.raises(ValueError, match="cache_budget_rows"):
+        c.prepare(np.asarray([4]), clear_pins=False)
+    # a window boundary (pins cleared) makes the same request succeed
+    assert c.prepare(np.asarray([4]), clear_pins=True) is not None
+
+
+def test_translate_and_back_with_padding_and_partial_line():
+    c = _cache(budget=12, line=4, host_rows=10)  # 3 lines, last one partial
+    rows = np.asarray([0, 3, 9, -1, 5])
+    c.prepare(np.unique(rows[rows >= 0]), clear_pins=True)
+    slots = np.asarray(c.translate(jnp.asarray(rows)))
+    assert slots[3] == -1  # padding survives
+    assert (slots[[0, 1, 2, 4]] >= 0).all()
+    # row offset inside the line is preserved
+    np.testing.assert_array_equal(slots[[0, 1, 2, 4]] % 4,
+                                  rows[[0, 1, 2, 4]] % 4)
+    np.testing.assert_array_equal(c.slots_to_rows(slots), rows)
+    # distinct rows map to distinct slots
+    assert len(set(slots[[0, 1, 2, 4]].tolist())) == 4
+
+
+def test_grow_extends_maps_keeps_residency():
+    c = _cache(budget=8, line=4, host_rows=8)  # 2 lines
+    c.prepare(np.asarray([1, 6]), clear_pins=True)
+    before = c.line_to_slot.copy()
+    c.grow(20)  # 5 lines now
+    assert c.line_to_slot.shape[0] == 5
+    np.testing.assert_array_equal(c.line_to_slot[:2], before)
+    assert (c.line_to_slot[2:] == -1).all()
+    assert np.asarray(c.line_to_slot_dev).shape[0] == 5
+
+
+def test_line_rows_np():
+    np.testing.assert_array_equal(
+        line_rows_np(np.asarray([0, 2]), 3), [0, 1, 2, 6, 7, 8]
+    )
+
+
+# ---------------------------------------------------------------------------
+# CachedSparseView round trip through a real engine
+# ---------------------------------------------------------------------------
+
+
+def _cached_engine(**kw):
+    kw.setdefault("cache_budget_rows", 32)
+    kw.setdefault("cache_line_rows", 4)
+    kw.setdefault("chunk_rows", 64)
+    return EmbeddingEngine(
+        (FeatureConfig("item", 8), FeatureConfig("user", 8)),
+        EngineConfig(backend="local-cached", capacity=1 << 10, **kw),
+        jax.random.PRNGKey(3),
+    )
+
+
+def test_cached_view_prepare_swaps_values_and_commit_writes_back():
+    eng = _cached_engine()
+    ids = {"item": jnp.asarray([[3, 60, 7, -1]]), "user": jnp.asarray([[2]])}
+    rows = eng.insert(ids)
+    host_before = {
+        t: np.asarray(eng.backend.table_emb(t)) for t in eng.merged_tables
+    }
+    view = eng.device_view()
+    slots = eng.prepare_rows(rows)
+    t = eng.backend.table_of("item")
+    hr = np.asarray(rows["item"]).reshape(-1)
+    sr = np.asarray(slots["item"]).reshape(-1)
+    assert sr[3] == -1
+    # swapped-in pool rows hold the host values
+    np.testing.assert_array_equal(
+        np.asarray(view.emb[t])[sr[:3]], host_before[t][hr[:3]]
+    )
+    # train-like mutation of the pool, then commit: host truth updated at
+    # exactly the resident rows, untouched elsewhere
+    view.emb[t] = view.emb[t].at[sr[:3]].add(1.0)
+    eng.flush()
+    host_after = np.asarray(eng.backend.table_emb(t))
+    np.testing.assert_allclose(host_after[hr[:3]],
+                               host_before[t][hr[:3]] + 1.0, rtol=1e-6)
+    untouched = np.setdiff1d(np.arange(host_after.shape[0]), hr[:3])
+    np.testing.assert_array_equal(host_after[untouched],
+                                  host_before[t][untouched])
+
+
+def test_cached_view_growth_extends_maps_only():
+    eng = _cached_engine(chunk_rows=32)
+    rows = eng.insert({"item": jnp.asarray([[1, 2, 3]])})
+    eng.device_view()
+    eng.prepare_rows(rows)
+    t = eng.backend.table_of("item")
+    pool_shape = eng._view.emb[t].shape
+    cap0 = eng.backend.row_capacity(t)
+    # force chunked growth with a flood of fresh ids
+    many = jnp.asarray(np.arange(10_000, 10_000 + 200)[None, :])
+    eng.insert({"item": many})
+    assert eng.backend.row_capacity(t) > cap0
+    assert eng._view.emb[t].shape == pool_shape  # pool is fixed-budget
+    cache = eng.backend.table_cache(t)
+    assert cache.line_to_slot.shape[0] == cache.num_lines_for(
+        eng.backend.row_capacity(t)
+    )
+    # host moments followed the growth (swap-ins of new rows read them)
+    assert eng._opt_states[t].mu.shape[0] == eng.backend.row_capacity(t)
+
+
+def test_cached_backend_stats_and_nbytes():
+    eng = _cached_engine()
+    assert eng.cache_stats() is None  # no borrow yet -> no caches
+    rows = eng.insert({"item": jnp.asarray([[5, 6, 7]])})
+    eng.device_view()
+    eng.prepare_rows(rows)
+    s = eng.cache_stats()
+    assert s["misses"] == 3 and s["hits"] == 0
+    assert s["swap_bytes"] > 0 and s["hit_rate"] == 0.0
+    eng.prepare_rows(rows)
+    s = eng.cache_stats()
+    assert s["last_hit_rate"] == 1.0 and s["last_swap_bytes"] == 0
+    assert eng.nbytes() > 0

@@ -409,3 +409,87 @@ def test_session_multidevice_parity_4dev():
             f"\n--- stderr ---\n{proc.stderr}"
         )
     assert "SESSION MULTIDEV OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# HBM-cached backend (embedding/cache/): fused session parity under swaps
+# ---------------------------------------------------------------------------
+
+
+def _sparse_samples(n, seed=3):
+    """Wide-vocab short-sequence samples: per-batch working sets stay far
+    below the table size, so a tiny slot budget actually caches."""
+    scfg = synth.SynthConfig(num_users=30, num_items=2000, avg_len=12,
+                             max_len=48, seed=7)
+    return synth.generate_samples(scfg, n, seed=seed)
+
+
+def _cached_vs_oracle(accum, budget, line, batches=6, min_ratio=0):
+    """Run the cached fused session against the local-dynamic whole-table
+    oracle on identical batches; assert exact-step losses, forced swaps, the
+    table/budget ratio, and final fp32 parity of params/tables/moments."""
+    def eng(backend, **kw):
+        return EngineConfig(backend=backend, capacity=1 << 12, chunk_rows=64,
+                            accum_batches=accum, **kw)
+
+    cached = TrainSession(_cfg(engine=eng(
+        "local-cached", cache_budget_rows=budget, cache_line_rows=line)))
+    oracle = TrainSession(_cfg(engine=eng("local-dynamic")))
+    samples = _sparse_samples(6 * batches)
+    for i in range(batches):
+        b = pad_batch(samples[i * 6:(i + 1) * 6], 0, bucket=32)
+        mc, mo = cached.train_step(b), oracle.train_step(b)
+        assert float(mc["weight"]) == float(mo["weight"])
+        np.testing.assert_allclose(float(mc["loss"]), float(mo["loss"]),
+                                   rtol=2e-5, atol=2e-5)
+        assert "cache_hit_rate" in mc and "cache_swap_mb" in mc
+        # a tiny budget + disjoint working sets: every step must swap
+        assert mc["cache_swap_mb"] > 0
+
+    t = cached.engine.backend.table_of("item")
+    ratio = cached.engine.backend.row_capacity(t) / budget
+    assert ratio >= min_ratio, f"table only {ratio:.1f}x the slot budget"
+    stats = cached.engine.cache_stats()
+    assert stats["swap_in_rows"] > 0 and stats["misses"] > 0
+
+    perr = jax.tree.reduce(max, jax.tree.map(
+        lambda a, b: float(np.max(np.abs(np.asarray(a, np.float32)
+                                         - np.asarray(b, np.float32)))),
+        cached.dense_params, oracle.dense_params))
+    assert perr < 1e-4, f"dense params diverged: {perr}"
+    emb_err = float(np.max(np.abs(
+        np.asarray(cached.engine.emb_of("item"))  # commits the cached view
+        - np.asarray(oracle.engine.emb_of("item")))))
+    assert emb_err < 1e-4, f"embedding tables diverged: {emb_err}"
+    sc, so = cached.engine.opt_state(t), oracle.engine.opt_state(t)
+    assert int(sc.step) == int(so.step)
+    for name in ("mu", "nu"):
+        merr = float(np.max(np.abs(np.asarray(getattr(sc, name))
+                                   - np.asarray(getattr(so, name)))))
+        assert merr < 1e-4, f"moments {name} diverged: {merr}"
+
+
+def test_session_cached_backend_matches_whole_table_oracle():
+    """Acceptance: a fused run over a table >=4x the device slot budget
+    matches the local-dynamic whole-table oracle to fp32 tolerance — params,
+    tables, AND rowwise moments — while every step forces line swaps."""
+    _cached_vs_oracle(accum=1, budget=96, line=1, batches=10, min_ratio=4)
+
+
+def test_session_cached_accum_window_matches_oracle():
+    """Same parity with accum_batches > 1 and multi-row lines: pinned lines
+    keep device accumulator slot handles valid across the window, and the
+    commit retargets pending handles slot -> host row."""
+    _cached_vs_oracle(accum=2, budget=192, line=2)
+
+
+def test_session_cached_budget_overflow_is_actionable():
+    """When working set + open window exceed the budget, the prepare phase
+    must fail with the sizing knobs in the message — not train wrong."""
+    cached = TrainSession(_cfg(engine=EngineConfig(
+        backend="local-cached", capacity=1 << 12, chunk_rows=64,
+        accum_batches=2, cache_budget_rows=96, cache_line_rows=1)))
+    samples = _sparse_samples(12)
+    cached.train_step(pad_batch(samples[:6], 0, bucket=32))
+    with pytest.raises(ValueError, match="cache_budget_rows"):
+        cached.train_step(pad_batch(samples[6:], 0, bucket=32))
